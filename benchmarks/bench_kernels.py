@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs pure-jnp oracle.
+
+On CPU these numbers measure the *interpreter*, not TPU performance —
+they exist to confirm the kernels execute and to provide the harness that
+would time them on real hardware (same entry points).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels():
+    rows = []
+    k1, k2, k3 = jax.random.split(KEY, 3)
+
+    # cim_gemm 512x512x512 int8
+    x = jax.random.randint(k1, (512, 512), -127, 128, jnp.int8)
+    w = jax.random.randint(k2, (512, 512), -127, 128, jnp.int8)
+    t_kernel = _time(lambda a, b: ops.cim_quantized_matmul(
+        a.astype(jnp.float32), *ops.quantize_weights_int8(
+            b.astype(jnp.float32))), x, w)
+    rows.append(("kernel_cim_gemm_512", t_kernel, "int8 512^3 + dequant"))
+
+    # flash attention 2x256x4x32
+    q = jax.random.normal(k1, (2, 256, 4, 32), jnp.float32)
+    kk = jax.random.normal(k2, (2, 256, 2, 32), jnp.float32)
+    v = jax.random.normal(k3, (2, 256, 2, 32), jnp.float32)
+    t_fa = _time(lambda *a: ops.flash_attention(*a, block_q=64, block_k=64),
+                 q, kk, v)
+    t_ref = _time(ref.flash_attention_ref, q, kk, v)
+    rows.append(("kernel_flash_attention", t_fa,
+                 f"interp_vs_jnp_ref={t_fa/t_ref:.1f}x (CPU interpreter)"))
+
+    # decode attention: B=4, S=2048 cache
+    qd = jax.random.normal(k1, (4, 2, 4, 64), jnp.float32)
+    kd = jax.random.normal(k2, (4, 2048, 2, 64), jnp.float32)
+    vd = jax.random.normal(k3, (4, 2048, 2, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(2048)[None], (4, 2048)).astype(jnp.int32)
+    qp = jnp.full((4,), 2047, jnp.int32)
+    t_dec = _time(lambda *a: ops.decode_attention(*a, block_k=512),
+                  qd, kd, vd, pos, qp)
+    rows.append(("kernel_decode_attention", t_dec, "B4 KV2048 GQA 2x4"))
+
+    # ssd scan
+    xs = jax.random.normal(k1, (8, 256, 16), jnp.float32)
+    la = -jnp.abs(jax.random.normal(k2, (8, 256))) * 0.3
+    bb = jax.random.normal(k3, (8, 256, 16), jnp.float32)
+    t_ssd = _time(lambda *a: ops.ssd_scan(*a, chunk=64)[0], xs, la, bb, bb)
+    rows.append(("kernel_ssd_scan", t_ssd, "BH8 S256 P16 N16 chunk64"))
+
+    # online softmax
+    sm = jax.random.normal(k1, (512, 4096), jnp.float32)
+    t_sm = _time(lambda a: ops.online_softmax(a, block_r=128, block_c=1024),
+                 sm)
+    rows.append(("kernel_online_softmax", t_sm, "512x4096 two-phase"))
+    return rows

@@ -1,0 +1,261 @@
+"""One benchmark function per paper table/figure.
+
+Each returns a list of rows ``(name, us_per_call, derived)`` where
+``derived`` is a compact string of the claim-relevant numbers (ours vs
+the paper's).  run.py prints the aggregate CSV.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (DEFAULT_ENERGY_MODEL as EM, design_a, design_b,
+                        dit_inference_cost, get_hardware, llm_decode_cost,
+                        llm_inference_cost, llm_prefill_cost, mxu_area_mm2,
+                        pick_designs, pipeline_parallel_dit_cost,
+                        pipeline_parallel_llm_cost, run_exploration,
+                        simulate_graph, tpuv4i_baseline)
+from repro.core.workloads import (ModelSpec, TransformerLayerSpec, dit_xl2,
+                                  embed_head_graph, gpt3_30b,
+                                  llm_decode_graph, llm_prefill_graph,
+                                  dit_graph)
+
+BASE = tpuv4i_baseline()
+CIM = get_hardware("cim-16x8")
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_table2():
+    """Table II: CIM-MXU vs digital MXU micro-comparison."""
+    def work():
+        return {
+            "digital_tops_w": EM.peak_tops_per_watt(BASE),
+            "cim_tops_w": EM.peak_tops_per_watt(CIM),
+            "area_ratio": mxu_area_mm2(BASE) / mxu_area_mm2(CIM),
+            "macs_parity": BASE.mxu.macs_per_cycle == CIM.mxu.macs_per_cycle,
+        }
+    d, us = _timed(work)
+    eff_ratio = d["cim_tops_w"] / d["digital_tops_w"]
+    return [("table2_mxu_comparison", us,
+             f"eff={d['cim_tops_w']:.2f}TOPS/W ratio={eff_ratio:.2f}x"
+             f"(paper 9.43x) area={d['area_ratio']:.2f}x(paper 2.02x) "
+             f"macs_parity={d['macs_parity']}")]
+
+
+def bench_fig2d_breakdown():
+    """Fig 2(d): transformer layers dominate end-to-end inference."""
+    def work():
+        # Llama2-13B-like: 40L, 40H, d=5120; Alpaca-ish decode step
+        layer = TransformerLayerSpec(d_model=5120, n_heads=40, n_kv_heads=40,
+                                     head_dim=128, d_ff=13824,
+                                     gated_ffn=True)
+        model = ModelSpec("llama2-13b", 40, layer, vocab=32000, bits=16)
+        body = simulate_graph(BASE, llm_decode_graph(model, 8, 1024))
+        eh = simulate_graph(BASE, embed_head_graph(model, 8))
+        llama_frac = body.latency_s / (body.latency_s + eh.latency_s)
+        dit = simulate_graph(BASE, dit_graph(dit_xl2(), 8))
+        # DiT pre/post processing ~ patchify + final LN/linear (modeled as
+        # one extra embed/head-scale graph)
+        dit_eh = simulate_graph(BASE, embed_head_graph(
+            ModelSpec("dit-aux", 1, dit_xl2().layer, vocab=1152), 8 * 1024))
+        dit_frac = dit.latency_s / (dit.latency_s + dit_eh.latency_s)
+        return llama_frac, dit_frac
+    (lf, df), us = _timed(work)
+    return [("fig2d_runtime_breakdown", us,
+             f"llama_layers={lf:.4f}(paper 0.9835) "
+             f"dit_blocks={df:.4f}(paper 0.9931)")]
+
+
+def bench_fig6():
+    """Fig 6: GPT-3-30B prefill/decode + DiT, baseline vs CIM TPU."""
+    rows = []
+
+    def prefill():
+        pb, pc = llm_prefill_cost(BASE), llm_prefill_cost(CIM)
+        return {
+            "gemm_frac": pb.breakdown_fractions()["gemm"],
+            "attn_frac": pb.attention_latency_s() / pb.latency_s,
+            "lat_ratio": pc.latency_s / pb.latency_s,
+            "energy_x": pb.mxu_energy_j / pc.mxu_energy_j,
+        }
+    d, us = _timed(prefill)
+    rows.append(("fig6_llm_prefill", us,
+                 f"gemm_frac={d['gemm_frac']:.3f}(paper .849) "
+                 f"attn_frac={d['attn_frac']:.3f}(paper .131) "
+                 f"cim_lat_ratio={d['lat_ratio']:.3f}(paper ~1.0) "
+                 f"energy={d['energy_x']:.2f}x(paper 9.21x)"))
+
+    def decode():
+        db, dc = llm_decode_cost(BASE), llm_decode_cost(CIM)
+        return {
+            "attn_frac": db.attention_latency_s() / db.latency_s,
+            "gemv_speedup": 1 - dc.attention_latency_s() /
+            db.attention_latency_s(),
+            "lat_red": 1 - dc.latency_s / db.latency_s,
+            "energy_x": db.mxu_energy_j / dc.mxu_energy_j,
+        }
+    d, us = _timed(decode)
+    rows.append(("fig6_llm_decode", us,
+                 f"attn_frac={d['attn_frac']:.3f}(paper .337) "
+                 f"gemv_speedup={d['gemv_speedup']:.3f}(paper .727) "
+                 f"lat_red={d['lat_red']:.3f}(paper .299) "
+                 f"energy={d['energy_x']:.1f}x(paper 13.4x)"))
+
+    def dit():
+        tb, tc = dit_inference_cost(BASE), dit_inference_cost(CIM)
+        return {
+            "gemm": tb.breakdown["gemm"],
+            "softmax": tb.breakdown["softmax"],
+            "lat_red": 1 - tc.latency_s / tb.latency_s,
+            "energy_x": tb.mxu_energy_j / tc.mxu_energy_j,
+        }
+    d, us = _timed(dit)
+    rows.append(("fig6_dit", us,
+                 f"gemm={d['gemm']:.3f}(paper .3565) "
+                 f"softmax={d['softmax']:.3f}(paper .369) "
+                 f"lat_red={d['lat_red']:.3f}(paper .0667) "
+                 f"energy={d['energy_x']:.1f}x(paper 10.4x)"))
+    return rows
+
+
+def bench_fig7():
+    """Fig 7 / Table IV: CIM-MXU design-space exploration."""
+    def work():
+        recs = run_exploration(quadrature=4)
+        picks = pick_designs(recs)
+        return recs, picks
+    (recs, picks), us = _timed(work)
+    base = recs[0]
+    rows = []
+    for r in recs[1:]:
+        row = r.row(base)
+        rows.append((f"fig7_{r.hw.name}", us / len(recs),
+                     f"llm_speedup={row['llm_speedup']:.3f} "
+                     f"llm_energy={row['llm_energy_saving']:.1f}x "
+                     f"dit_speedup={row['dit_speedup']:.3f} "
+                     f"dit_energy={row['dit_energy_saving']:.2f}x"))
+    rows.append(("fig7_design_picks", us,
+                 f"A={picks['design_a'].hw.name}(paper 4x8x8) "
+                 f"B={picks['design_b'].hw.name}(paper 8x16x8)"))
+    # headline claims (C12, C13, C14, C18)
+    byname = {r.hw.name: r for r in recs}
+    c12 = byname["cim-tpu-8x16x16"].llm.latency_s / \
+        byname["cim-tpu-8x16x8"].llm.latency_s
+    c13 = base.llm.mxu_energy_j / byname["cim-tpu-2x8x8"].llm.mxu_energy_j
+    c14 = 1 - byname["cim-tpu-8x16x16"].dit.latency_s / base.dit.latency_s
+    c18 = max(base.llm.latency_s / r.llm.latency_s - 1 for r in recs[1:])
+    rows.append(("fig7_claims", us,
+                 f"16x16_vs_16x8_llm_gain={1-c12:.3f}(paper .025) "
+                 f"2x8x8_energy={c13:.1f}x(paper 27.3x) "
+                 f"8x16x16_dit_red={c14:.3f}(paper .338) "
+                 f"max_llm_gain={c18:.3f}(paper .442)"))
+    return rows
+
+
+def bench_fig8():
+    """Fig 8: multi-TPU pipeline-parallel throughput (1/2/4 chips)."""
+    rows = []
+    model = gpt3_30b()
+    dit = dit_xl2()
+
+    def work():
+        out = {}
+        for hw, tag in [(BASE, "base"), (design_a(), "A"),
+                        (design_b(), "B")]:
+            out[tag] = {
+                n: pipeline_parallel_llm_cost(hw, model, n, quadrature=2)
+                for n in (1, 2, 4)}
+        return out
+    d, us = _timed(work)
+    for n in (1, 2, 4):
+        a_up = d["A"][n].throughput_per_s / d["base"][n].throughput_per_s
+        b_up = d["B"][n].throughput_per_s / d["base"][n].throughput_per_s
+        e_a = d["base"][n].mxu_energy_j / d["A"][n].mxu_energy_j
+        e_b = d["base"][n].mxu_energy_j / d["B"][n].mxu_energy_j
+        rows.append((f"fig8_llm_{n}chip", us / 9,
+                     f"A_speedup={a_up:.3f}(paper avg 1.28) "
+                     f"B_speedup={b_up:.3f}(paper 1.33) "
+                     f"A_energy={e_a:.1f}x(paper 24.2x) "
+                     f"B_energy={e_b:.1f}x(paper 6.34x)"))
+    scaling = d["base"][4].throughput_per_s / d["base"][1].throughput_per_s
+    rows.append(("fig8_pp_scaling", us, f"4chip_vs_1chip={scaling:.2f}x"))
+
+    # TP vs PP at 4 chips (the paper picks PP for throughput; TP buys
+    # latency instead — [28] Megatron)
+    from repro.core import tensor_parallel_llm_cost
+    tp4 = tensor_parallel_llm_cost(BASE, model, 4, quadrature=2)
+    pp4 = d["base"][4]
+    tp1 = tensor_parallel_llm_cost(BASE, model, 1, quadrature=2)
+    rows.append(("fig8_tp_vs_pp_4chip", us,
+                 f"tp_latency_speedup={tp1.latency_s/tp4.latency_s:.2f}x "
+                 f"pp_throughput_vs_tp="
+                 f"{pp4.throughput_per_s/tp4.throughput_per_s:.2f}x "
+                 f"(paper uses PP for batch throughput)"))
+    return rows
+
+
+def bench_assigned_archs():
+    """Beyond-paper: the 10 assigned architectures on the simulator."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.core.bridge import graph_from_config
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+
+        def work(cfg=cfg):
+            dec_b = simulate_graph(BASE, graph_from_config(cfg, 8, 1, 1280))
+            dec_c = simulate_graph(CIM, graph_from_config(cfg, 8, 1, 1280))
+            return {
+                "lat_red": 1 - dec_c.latency_s / dec_b.latency_s,
+                "energy_x": dec_b.mxu_energy_j / max(1e-30,
+                                                     dec_c.mxu_energy_j),
+            }
+        d, us = _timed(work)
+        rows.append((f"archs_decode_{arch}", us,
+                     f"cim_lat_red={d['lat_red']:.3f} "
+                     f"cim_mxu_energy={d['energy_x']:.1f}x"))
+    return rows
+
+
+def bench_int4_extension():
+    """Beyond-paper: INT4 bit-serial CIM mode.
+
+    The CIM-MXU's throughput scales with input bit-width (bit-serial
+    broadcast: 4-bit inputs sweep output channels in half the cycles) —
+    a knob the digital systolic MXU does not have.  We re-cost the
+    paper's two workloads at INT4 activations/weights.
+    """
+    import dataclasses
+
+    rows = []
+
+    def work():
+        gpt4b = dataclasses.replace(gpt3_30b(), bits=4)
+        dit4b = dataclasses.replace(dit_xl2(), bits=4)
+        out = {}
+        out["dit_base8"] = simulate_graph(BASE, dit_graph(dit_xl2(), 8))
+        out["dit_cim8"] = simulate_graph(CIM, dit_graph(dit_xl2(), 8))
+        out["dit_cim4"] = simulate_graph(CIM, dit_graph(dit4b, 8))
+        out["llm_cim8"] = simulate_graph(CIM, llm_decode_graph(gpt3_30b(),
+                                                               8, 1280))
+        out["llm_cim4"] = simulate_graph(CIM, llm_decode_graph(gpt4b,
+                                                               8, 1280))
+        return out
+    d, us = _timed(work)
+    dit_gain = 1 - d["dit_cim4"].latency_s / d["dit_cim8"].latency_s
+    dit_vs_base = 1 - d["dit_cim4"].latency_s / d["dit_base8"].latency_s
+    llm_gain = 1 - d["llm_cim4"].latency_s / d["llm_cim8"].latency_s
+    rows.append(("beyond_int4_cim", us,
+                 f"dit_int4_vs_int8={dit_gain:.3f} "
+                 f"dit_int4_vs_digital={dit_vs_base:.3f} "
+                 f"llm_decode_int4_gain={llm_gain:.3f} "
+                 f"(decode stays HBM-bound; int4 also halves KV bytes)"))
+    return rows
+
+
+ALL_BENCHES = [bench_table2, bench_fig2d_breakdown, bench_fig6, bench_fig7,
+               bench_fig8, bench_assigned_archs, bench_int4_extension]

@@ -1,0 +1,34 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-kernels]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived holds the
+claim-relevant numbers, ours vs the paper's).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-kernels", action="store_true",
+                    help="skip interpret-mode kernel microbenches (slow)")
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import ALL_BENCHES
+
+    print("name,us_per_call,derived")
+    rows = []
+    for bench in ALL_BENCHES:
+        rows.extend(bench())
+    if not args.skip_kernels:
+        from benchmarks.bench_kernels import bench_kernels
+        rows.extend(bench_kernels())
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

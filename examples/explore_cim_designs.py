@@ -1,0 +1,29 @@
+"""Reproduce the paper's §V design-space exploration (Table IV / Fig 7)
+and the Design A / Design B trade-off picks.
+
+    PYTHONPATH=src python examples/explore_cim_designs.py
+"""
+from repro.core import mxu_area_mm2, pick_designs, run_exploration
+
+
+def main():
+    recs = run_exploration(quadrature=4)
+    base = recs[0]
+    print(f"{'config':18s} {'peakTOPS':>8s} {'LLM speedup':>12s} "
+          f"{'LLM energy':>11s} {'DiT speedup':>12s} {'DiT energy':>11s} "
+          f"{'area mm2':>9s}")
+    for r in recs:
+        row = r.row(base)
+        print(f"{row['hw']:18s} {row['peak_tops']:8.1f} "
+              f"{row['llm_speedup']:12.3f} {row['llm_energy_saving']:10.1f}x "
+              f"{row['dit_speedup']:12.3f} {row['dit_energy_saving']:10.2f}x "
+              f"{mxu_area_mm2(r.hw):9.1f}")
+    picks = pick_designs(recs)
+    print(f"\nDesign A (LLM-optimal):  {picks['design_a'].hw.name} "
+          f"(paper: cim-tpu-4x8x8)")
+    print(f"Design B (DiT-optimal):  {picks['design_b'].hw.name} "
+          f"(paper: cim-tpu-8x16x8)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Beyond-paper: cost every assigned architecture on the CIM-TPU
+simulator — the co-design loop the paper's tool exists for.
+
+    PYTHONPATH=src python examples/simulate_assigned_archs.py
+"""
+from repro.configs import ARCH_IDS, get_config
+from repro.core import get_hardware, simulate_graph, tpuv4i_baseline
+from repro.core.bridge import graph_from_config
+
+
+def main():
+    base = tpuv4i_baseline()
+    cim = get_hardware("cim-16x8")
+    print(f"{'arch':22s} {'decode ms (base)':>16s} {'decode ms (CIM)':>16s} "
+          f"{'lat. red.':>9s} {'MXU energy':>10s}")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        g = graph_from_config(cfg, batch=8, q_len=1, kv_len=1280)
+        b = simulate_graph(base, g)
+        c = simulate_graph(cim, g)
+        print(f"{arch:22s} {b.latency_s*1e3:16.2f} {c.latency_s*1e3:16.2f} "
+              f"{100*(1-c.latency_s/b.latency_s):8.1f}% "
+              f"{b.mxu_energy_j/max(1e-30, c.mxu_energy_j):9.1f}x")
+    print("\nInsight: MHA/hybrid archs replicate the paper's GPT-3 GEMV win;"
+          "\nGQA/MQA/MLA archs are HBM-bound and gain mostly energy.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Train a small LM end to end: data pipeline -> train step -> checkpoints,
+with a simulated mid-run crash + restart to demonstrate fault tolerance.
+
+    PYTHONPATH=src python examples/train_small_lm.py [--steps 60]
+"""
+import argparse
+import shutil
+
+import jax
+
+from repro import optim
+from repro.configs import get_config, reduced_config
+from repro.data import for_model
+from repro.models import build_model
+from repro.training import Trainer, TrainerConfig, simple_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="gemma-2b")
+    args = ap.parse_args()
+
+    ckpt_dir = "checkpoints/example"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    cfg = reduced_config(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = optim.AdamWConfig(learning_rate=3e-3)
+    step = simple_train_step(model, ocfg)
+    pipe = for_model(cfg, batch=8, seq_len=32, seed=0)
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=20,
+                         log_every=10, checkpoint_dir=ckpt_dir)
+
+    # phase 1: crash at step 35 (simulated node failure)
+    def bomb(s):
+        if s == 35:
+            raise RuntimeError("simulated node failure at step 35")
+
+    t1 = Trainer(model, step, params, optim.init(ocfg, params), pipe, tcfg,
+                 failure_hook=bomb)
+    try:
+        t1.run()
+    except RuntimeError as e:
+        print(f"!! {e} — relaunching from the latest checkpoint")
+
+    # phase 2: fresh trainer restores from the last committed checkpoint
+    t2 = Trainer(model, step, model.init(jax.random.PRNGKey(0)),
+                 optim.init(ocfg, params), pipe, tcfg)
+    out = t2.run()
+    print(f"resumed at step {t2.ckpt.latest_step() and 'checkpoint'} and "
+          f"finished: step={out['final_step']} loss={out['final_loss']:.4f}")
+    for rec in out["history"]:
+        print(f"  step {rec['step']:4d}  loss {rec['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .base import ModelConfig
+from .registry import ARCH_IDS, all_configs, get_config
+from .shapes import ASSIGNED_SHAPES, PERF_SHAPES, SHAPES, ShapeCell, \
+    cell_applicable, input_specs, reduced_config
+
+__all__ = ["ModelConfig", "ARCH_IDS", "all_configs", "get_config", "SHAPES",
+           "ASSIGNED_SHAPES", "PERF_SHAPES",
+           "ShapeCell", "cell_applicable", "input_specs", "reduced_config"]

@@ -1,0 +1,165 @@
+"""Architecture configuration schema.
+
+A model is a stack of (mixer, ffn) blocks:
+    mixer ∈ {"attn", "attn_local", "mla", "mamba2", "mlstm", "slstm"}
+    ffn   ∈ {"dense", "moe", "none"}
+Consecutive identical blocks are grouped and scanned (layer-stacked
+params), so heterogeneous stacks (gemma3 5:1 local:global, zamba2
+Mamba+attention, xLSTM m/s, deepseek-v3 dense-then-MoE) lower to a small
+number of scan bodies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+from repro.models.xlstm import XLSTMConfig
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    activation: str = "swiglu"
+    norm: str = "rmsnorm"
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+
+    # attention layout
+    sliding_window: Optional[int] = None
+    local_global_pattern: int = 0     # N local layers per 1 global (gemma3: 5)
+    attn_every: int = 0               # hybrid: attention block every k layers
+
+    # family extensions
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # modality frontend (stub): None | "audio" | "vision"
+    frontend: Optional[str] = None
+    frontend_len: int = 0             # e.g. 256 SigLIP patches
+    frontend_dim: int = 0             # frontend embedding dim (0 = d_model)
+
+    # serving/runtime knobs
+    family: str = "dense"             # dense|moe|ssm|hybrid|audio|vlm
+    long_context_capable: bool = False
+    remat: bool = True
+    param_dtype: str = "bfloat16"
+    # gradient-accumulation microbatches for train_4k (bounds live
+    # activations per device; must divide global_batch / dp_degree)
+    train_microbatches: int = 1
+    # KV-cache precision ("bfloat16" | "int8"); int8 is the serving-side
+    # analogue of the paper's INT8 CIM mode (halves decode HBM traffic)
+    kv_cache_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    def layer_specs(self) -> tuple[tuple[str, str], ...]:
+        """Per-layer (mixer, ffn) kinds."""
+        out = []
+        for i in range(self.n_layers):
+            if self.xlstm is not None:
+                e = self.xlstm.slstm_every
+                if e and (i % e) == e - 1:
+                    out.append(("slstm", "none"))
+                else:
+                    out.append(("mlstm", "none"))
+                continue
+            if self.ssm is not None:
+                if self.attn_every and (i % self.attn_every) == self.attn_every - 1:
+                    out.append(("attn", "dense"))
+                else:
+                    out.append(("mamba2", "none"))
+                continue
+            # attention mixers
+            if self.mla is not None:
+                mixer = "mla"
+            elif self.local_global_pattern:
+                p = self.local_global_pattern + 1
+                mixer = "attn" if (i % p) == self.local_global_pattern \
+                    else "attn_local"
+            elif self.sliding_window and not self.local_global_pattern:
+                mixer = "attn_local"
+            else:
+                mixer = "attn"
+            # ffn kind
+            if self.moe is not None and i >= self.moe.first_k_dense:
+                ffn = "moe"
+            else:
+                ffn = "dense"
+            out.append((mixer, ffn))
+        return tuple(out)
+
+    def layer_groups(self) -> list[tuple[tuple[str, str], int]]:
+        """Run-length encoded consecutive layer specs: [(spec, count), ...]."""
+        groups: list[tuple[tuple[str, str], int]] = []
+        for spec in self.layer_specs():
+            if groups and groups[-1][0] == spec:
+                groups[-1] = (spec, groups[-1][1] + 1)
+            else:
+                groups.append((spec, 1))
+        return groups
+
+    @property
+    def uses_full_attention(self) -> bool:
+        return any(m in ("attn", "mla") for m, _ in self.layer_specs())
+
+    def param_count(self) -> int:
+        """Approximate parameter count (sanity checks / 6ND roofline)."""
+        d, L = self.d_model, self.n_layers
+        total = self.vocab * d * (1 if self.tie_embeddings else 2)
+        for mixer, ffn in self.layer_specs():
+            if mixer in ("attn", "attn_local"):
+                total += d * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+                total += self.n_heads * self.head_dim * d
+            elif mixer == "mla":
+                m = self.mla
+                total += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * m.qk_head_dim
+                total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                total += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                total += self.n_heads * m.v_head_dim * d
+            elif mixer == "mamba2":
+                s = self.ssm
+                total += d * (2 * s.d_inner(d) + 2 * s.n_groups * s.state_dim
+                              + s.n_heads(d)) + s.d_inner(d) * d
+            elif mixer == "mlstm":
+                xc = self.xlstm
+                di = int(xc.mlstm_proj_factor * d)
+                total += d * 2 * di + 3 * di * di + di * d
+            elif mixer == "slstm":
+                total += 4 * d * d + int(self.xlstm.slstm_ffn_factor * d) * d * 3
+            if ffn == "dense":
+                mult = 3 if self.activation in ("geglu", "swiglu") else 2
+                total += mult * d * self.d_ff
+            elif ffn == "moe":
+                mo = self.moe
+                mult = 3 if self.activation in ("geglu", "swiglu") else 2
+                total += mo.n_routed_experts * mult * d * mo.d_expert
+                total += d * mo.n_routed_experts
+                if mo.n_shared_experts:
+                    total += mult * d * (mo.shared_d_ff or
+                                         mo.d_expert * mo.n_shared_experts)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE top-k accounting)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        mo = self.moe
+        mult = 3 if self.activation in ("geglu", "swiglu") else 2
+        n_moe_layers = sum(1 for _, f in self.layer_specs() if f == "moe")
+        routed_all = n_moe_layers * mo.n_routed_experts * mult * self.d_model * mo.d_expert
+        routed_active = n_moe_layers * mo.top_k * mult * self.d_model * mo.d_expert
+        return int(full - routed_all + routed_active)

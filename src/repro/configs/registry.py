@@ -1,0 +1,33 @@
+"""--arch registry: id -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig
+
+_MODULES = {
+    "command-r-plus-104b": "command_r_plus_104b",
+    "gemma3-4b": "gemma3_4b",
+    "gemma-2b": "gemma_2b",
+    "deepseek-67b": "deepseek_67b",
+    "musicgen-medium": "musicgen_medium",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "xlstm-350m": "xlstm_350m",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "paligemma-3b": "paligemma_3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        mod = _MODULES[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; options: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

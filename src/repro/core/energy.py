@@ -1,0 +1,135 @@
+"""Energy model for CIM-based TPU simulation (paper §IV-A, Table II).
+
+The paper's physical implementation (TSMC 22 nm, post-P&R) measured:
+
+    digital 128x128 MXU : 0.77 TOPS/W, 0.648 TOPS/mm^2
+    16x8 CIM-MXU        : 7.26 TOPS/W, 1.31  TOPS/mm^2   (9.43x / 2.02x)
+
+We decompose the measured full-utilization energy/op into an *active* MAC
+energy plus an *idle* per-unit-cycle overhead (clock tree, pipeline
+registers, SRAM leakage).  At full utilization e_total = e_active +
+e_idle; at utilization u the effective energy/MAC rises as
+``e_active + e_idle / u``, which is exactly the mechanism behind the
+paper's observation that *smaller* CIM arrays give out-sized energy wins
+(27.3x vs the 9.43x peak-efficiency ratio) on low-utilization decode.
+
+MXU energy is accounted separately from memory-system energy, matching
+the paper's "MXU energy" comparisons; memory/VPU energies are still
+modeled so total-chip numbers are available.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .hardware import CIMMXUConfig, SystolicMXUConfig, TPUConfig
+
+PJ = 1e-12
+
+
+@dataclass(frozen=True)
+class EnergyModel:
+    # --- digital systolic MXU (calibrated: sum = 1/0.77e12 J/op * 2 ops/MAC)
+    digital_mac_active_pj: float = 2.10     # pJ per MAC
+    digital_idle_pj: float = 0.50           # pJ per MAC-unit per active cycle
+    digital_weight_write_pj_per_byte: float = 1.0
+    # Flop pipelines clock-gate well while stalled on memory.
+    digital_stall_gating: float = 0.15
+
+    # --- CIM-MXU (calibrated: sum = 1/7.26e12 J/op * 2 ops/MAC = 0.2755)
+    cim_mac_active_pj: float = 0.2285
+    cim_idle_pj: float = 0.047              # SRAM array leakage (retention)
+    cim_weight_write_pj_per_byte: float = 0.5
+    # SRAM retention leakage cannot be gated away while weights are held,
+    # so a stalled CIM-MXU keeps burning its idle power.  This is the
+    # mechanism behind the paper's out-sized energy wins for *small* CIM
+    # arrays on memory-bound decode (27.3x for 2x(8x8) vs the 9.43x peak
+    # efficiency ratio): fewer retained cells -> less leakage per stall
+    # cycle.
+    cim_stall_gating: float = 1.0
+
+    # --- vector unit
+    vpu_op_pj: float = 0.55
+
+    # --- memory system (pJ/byte) — reported separately from MXU energy
+    vmem_pj_per_byte: float = 0.8
+    cmem_pj_per_byte: float = 1.6
+    hbm_pj_per_byte: float = 7.0
+    ici_pj_per_byte: float = 10.0
+
+    # ------------------------------------------------------------------
+    def mxu_energy(
+        self,
+        tpu: TPUConfig,
+        active_macs: float,
+        active_cycles: float,
+        stall_cycles: float,
+        weight_bytes: float,
+    ) -> float:
+        """Energy (J) consumed by all MXUs of ``tpu`` for one op.
+
+        active_cycles: cycles any MXU is processing (fill/drain included).
+        stall_cycles : cycles the op is alive but MXUs starved (memory).
+        """
+        mxu = tpu.mxu
+        units = tpu.total_mac_units
+        if isinstance(mxu, CIMMXUConfig):
+            e_mac, e_idle, e_wr, gating = (
+                self.cim_mac_active_pj,
+                self.cim_idle_pj,
+                self.cim_weight_write_pj_per_byte,
+                self.cim_stall_gating,
+            )
+        elif isinstance(mxu, SystolicMXUConfig):
+            e_mac, e_idle, e_wr, gating = (
+                self.digital_mac_active_pj,
+                self.digital_idle_pj,
+                self.digital_weight_write_pj_per_byte,
+                self.digital_stall_gating,
+            )
+        else:  # pragma: no cover - defensive
+            raise TypeError(f"unknown MXU type {type(mxu)}")
+
+        dynamic = active_macs * e_mac
+        idle = units * active_cycles * e_idle
+        stalled = units * stall_cycles * e_idle * gating
+        weights = weight_bytes * e_wr
+        return (dynamic + idle + stalled + weights) * PJ
+
+    def vpu_energy(self, vpu_ops: float) -> float:
+        return vpu_ops * self.vpu_op_pj * PJ
+
+    def memory_energy(self, hbm_bytes: float, cmem_bytes: float,
+                      vmem_bytes: float) -> float:
+        return (
+            hbm_bytes * self.hbm_pj_per_byte
+            + cmem_bytes * self.cmem_pj_per_byte
+            + vmem_bytes * self.vmem_pj_per_byte
+        ) * PJ
+
+    def ici_energy(self, bytes_moved: float) -> float:
+        return bytes_moved * self.ici_pj_per_byte * PJ
+
+    # ------------------------------------------------------------------
+    def peak_tops_per_watt(self, tpu: TPUConfig) -> float:
+        """Full-utilization efficiency — reproduces Table II."""
+        if isinstance(tpu.mxu, CIMMXUConfig):
+            per_mac = self.cim_mac_active_pj + self.cim_idle_pj
+        else:
+            per_mac = self.digital_mac_active_pj + self.digital_idle_pj
+        return 2.0 / per_mac  # (2 ops/MAC) / (pJ/MAC) == TOPS/W
+
+
+# Area model (paper Table II): mm^2 per TOPS at full utilization.
+DIGITAL_TOPS_PER_MM2 = 0.648
+CIM_TOPS_PER_MM2 = 1.31
+
+
+def mxu_area_mm2(tpu: TPUConfig) -> float:
+    if isinstance(tpu.mxu, CIMMXUConfig):
+        density = CIM_TOPS_PER_MM2
+    else:
+        density = DIGITAL_TOPS_PER_MM2
+    return tpu.peak_tops / density
+
+
+DEFAULT_ENERGY_MODEL = EnergyModel()

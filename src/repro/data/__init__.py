@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, Pipeline, for_model
+
+__all__ = ["DataConfig", "Pipeline", "for_model"]

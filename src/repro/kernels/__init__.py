@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True).
+
+kernels/<name>.py : pl.pallas_call + BlockSpec implementations
+ops.py            : jit'd wrappers (padding, quant epilogues, dispatch)
+ref.py            : pure-jnp oracles
+
+Kernels cover the compute hot-spots the paper optimizes: INT8
+weight-stationary GEMM (CIM-MXU mode), decode-GEMV attention, prefill
+flash attention, online softmax [27], and the SSD chunk scan for the
+SSM/hybrid assigned architectures.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,90 @@
+"""CIM-MXU GEMM kernel — TPU-native adaptation of the paper's INT8 mode.
+
+The paper's CIM-MXU holds a (16x8 cores) x (128x256) weight tile resident
+in SRAM and streams activations through it (weight-stationary, bit-serial
+input broadcast, simultaneous compute + weight write).  The TPU analogue:
+
+* INT8 x INT8 -> INT32 matmul blocks sized to the CIM tile structure —
+  ``block_k`` multiples of 128 (core K dim), ``block_n`` multiples of 256
+  (core N dim) — kept resident in VMEM across the M sweep (the Pallas
+  grid orders K innermost so each weight block is loaded once per
+  (m, n) tile, mirroring weight-stationarity);
+* double-buffered weight DMA (Pallas pipelines block fetches with
+  compute) standing in for the CIM macro's concurrent weight-port write;
+* per-output-channel scale dequantization in the epilogue, matching the
+  paper's post-processing unit.
+
+ops.py wraps this with dynamic activation quantization; ref.py holds the
+pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# CIM core geometry (paper Table I): 128 x 256 per core.
+CORE_K = 128
+CORE_N = 256
+
+
+def _cim_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k_steps: int):
+    """One (block_m x block_n) output tile; K swept innermost."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # INT8 MACs with INT32 accumulation (the CIM macro's digital adder
+    # tree); MXU-friendly dot.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def cim_gemm_int8(x: jax.Array, w: jax.Array,
+                  block_m: int = 256, block_n: int = 2 * CORE_N,
+                  block_k: int = 4 * CORE_K,
+                  interpret: bool = False) -> jax.Array:
+    """INT8 GEMM: x [M, K] int8 @ w [K, N] int8 -> int32 [M, N].
+
+    Dims must be multiples of the block sizes (ops.py pads).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (K, K2)
+
+    def _fit(dim: int, block: int) -> int:
+        block = min(block, dim)
+        while dim % block:
+            block //= 2
+        return max(1, block)
+
+    block_m = _fit(M, block_m)
+    block_n = _fit(N, block_n)
+    block_k = _fit(K, block_k)
+
+    n_k_steps = K // block_k
+    grid = (M // block_m, N // block_n, n_k_steps)
+    return pl.pallas_call(
+        functools.partial(_cim_gemm_kernel, n_k_steps=n_k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,107 @@
+"""Decode attention kernel — the GEMV-shaped workload the paper's CIM-MXU
+accelerates (§IV-B: bit-serial broadcast of the single query against the
+streamed KV cache, 72.7% faster than the systolic baseline).
+
+TPU adaptation: flash-decode.  One query token per sequence attends over
+the ring-buffer KV cache; the cache is streamed through VMEM in blocks
+(the "weight update" side of the CIM analogy), with the online-softmax
+state in scratch.  Per-slot true positions (ring-buffer semantics) drive
+masking, so sliding-window layers work unchanged.
+
+Grid: (B, KH, kv_blocks) — kv innermost.
+q:   [B, KH, G, D]    (GQA groups factored)
+k,v: [B, S, KH, D]
+pos: [B, S] int32     (slot positions; 2**30 = empty)
+q_pos: [B] int32      (current decode position)
+out: [B, KH, G, D]
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, window,
+                   n_kv_steps: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0]                        # [G, D]
+    k = k_ref[0]                           # [block_k, 1, D] -> squeeze
+    k = k[:, 0]                            # [block_k, D]
+    v = v_ref[0][:, 0]
+    kpos = pos_ref[0]                      # [block_k]
+    qpos = qpos_ref[b]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = kpos[None, :] <= qpos
+    if window is not None:
+        ok &= kpos[None, :] > qpos - window
+    s = jnp.where(ok, s, NEG_INF)          # [G, block_k]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ki == n_kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, q_pos: jax.Array, window=None,
+                     block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B, KH, G, D]; k/v: [B, S, KH, D]; pos: [B, S]; q_pos: [B]."""
+    B, KH, G, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    grid = (B, KH, nk)
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          n_kv_steps=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # q_pos [B]
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, q, k, v, pos)

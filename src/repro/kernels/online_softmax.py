@@ -1,0 +1,90 @@
+"""Online-softmax kernel (paper §III-C, algorithm [27]).
+
+The paper implements Softmax with the online normalizer and finds it is
+the DiT inference bottleneck (36.9% of block latency).  Row-blocked:
+each grid step owns ``block_r`` full rows in VMEM and computes the
+single-pass max/sum normalization; columns are swept in-register.  For
+rows longer than the VMEM budget the column dimension is blocked too,
+with (m, l) running state in scratch and a rescale on the final column
+block — the literal online-softmax recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _softmax_rows_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.exp(x - m)
+    o_ref[...] = (p / jnp.sum(p, -1, keepdims=True)).astype(o_ref.dtype)
+
+
+def _softmax_online_kernel(x_ref, o_ref, m_ref, l_ref, *, n_col_steps: int):
+    """Two sweeps over column blocks: stats pass then normalize pass."""
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    phase_stats = cj < n_col_steps
+    x = x_ref[...].astype(jnp.float32)
+
+    @pl.when(phase_stats)
+    def _stats():
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(x, -1, keepdims=True))
+        l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + \
+            jnp.sum(jnp.exp(x - m_new), -1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when(jnp.logical_not(phase_stats))
+    def _normalize():
+        o_ref[...] = (jnp.exp(x - m_ref[...]) /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c",
+                                             "interpret"))
+def online_softmax(x: jax.Array, block_r: int = 256, block_c: int = 2048,
+                   interpret: bool = False) -> jax.Array:
+    """Softmax over the last axis of a 2-D array [R, C]."""
+    R, C = x.shape
+    block_r = min(block_r, R)
+    assert R % block_r == 0
+
+    if C <= block_c:
+        return pl.pallas_call(
+            _softmax_rows_kernel,
+            grid=(R // block_r,),
+            in_specs=[pl.BlockSpec((block_r, C), lambda r: (r, 0))],
+            out_specs=pl.BlockSpec((block_r, C), lambda r: (r, 0)),
+            out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+            interpret=interpret,
+        )(x)
+
+    assert C % block_c == 0
+    nc = C // block_c
+    return pl.pallas_call(
+        functools.partial(_softmax_online_kernel, n_col_steps=nc),
+        grid=(R // block_r, 2 * nc),
+        in_specs=[pl.BlockSpec((block_r, block_c),
+                               lambda r, c, nc=nc: (r, c % nc))],
+        out_specs=pl.BlockSpec((block_r, block_c),
+                               lambda r, c, nc=nc: (r, c % nc)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_r, 1), jnp.float32),
+            pltpu.VMEM((block_r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

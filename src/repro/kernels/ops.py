@@ -1,0 +1,105 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) every op runs the kernel in ``interpret=True``
+mode; on a real TPU backend the compiled kernels run natively.  The
+wrappers handle padding to block multiples and the quantization epilogue
+for the CIM INT8 path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .cim_gemm import cim_gemm_int8, CORE_K, CORE_N
+from .decode_attention import decode_attention as _decode_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .online_softmax import online_softmax as _softmax_kernel
+from .ssd_scan import ssd_scan as _ssd_kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+# ---------------------------------------------------------------------------
+# CIM quantized matmul (INT8 weight-stationary + dequant epilogue)
+# ---------------------------------------------------------------------------
+def quantize_weights_int8(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric int8: w [K, N] -> (w_q, scale [N])."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0) + 1e-12
+    scale = amax / 127.0
+    w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127,
+                   127).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cim_quantized_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                         interpret: bool | None = None) -> jax.Array:
+    """Dynamic-activation-quant INT8 matmul with dequant epilogue.
+
+    x [M, K] bf16/f32; w_q [K, N] int8; w_scale [N] -> [M, N] float32.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) + 1e-12
+    x_scale = amax / 127.0
+    x_q = jnp.clip(jnp.round(x32 / x_scale), -127, 127).astype(jnp.int8)
+
+    x_q, M = _pad_to(x_q, 0, 256)
+    x_q, K = _pad_to(x_q, 1, CORE_K)
+    w_p, _ = _pad_to(w_q, 0, CORE_K)
+    w_p, N = _pad_to(w_p, 1, CORE_N)
+    acc = cim_gemm_int8(x_q, w_p, interpret=interpret)
+    acc = acc[:M, :N].astype(jnp.float32)
+    return acc * x_scale * w_scale[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, causal=True, window=None, block_q=256,
+                    block_k=512, interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return _flash_kernel(q, k, v, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k,
+                         interpret=interpret)
+
+
+def decode_attention(q, k, v, pos, q_pos, window=None, block_k=512,
+                     interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return _decode_kernel(q, k, v, pos, q_pos, window=window,
+                          block_k=block_k, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan / softmax
+# ---------------------------------------------------------------------------
+def ssd_scan(x, log_a, b, c, chunk=128, interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return _ssd_kernel(x, log_a, b, c, chunk=chunk, interpret=interpret)
+
+
+def online_softmax(x, block_r=256, block_c=2048,
+                   interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return _softmax_kernel(x, block_r=block_r, block_c=block_c,
+                           interpret=interpret)
+
+
+# re-export oracles for convenience
+ref = _ref

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def cim_gemm_int8_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int8 [M,K] @ int8 [K,N] -> int32."""
+    return jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def quantized_matmul_ref(x: jax.Array, w_q: jax.Array,
+                         w_scale: jax.Array) -> jax.Array:
+    """bf16/f32 activations x per-channel-int8 weights (dequant ref)."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) + 1e-12
+    x_scale = amax / 127.0
+    x_q = jnp.clip(jnp.round(x32 / x_scale), -127, 127).astype(jnp.int8)
+    acc = cim_gemm_int8_ref(x_q, w_q).astype(jnp.float32)
+    return acc * x_scale * w_scale[None, :]
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None):
+    """Dense attention oracle; q [B,S,H,D], k/v [B,S,KH,D]."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(D)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, D)
+
+
+def decode_attention_ref(q, k, v, pos, q_pos, window=None):
+    """q [B,KH,G,D]; k/v [B,S,KH,D]; pos [B,S]; q_pos [B]."""
+    B, KH, G, D = q.shape
+    s = jnp.einsum("bhgd,bshd->bhgs", q, k).astype(jnp.float32)
+    s = s / math.sqrt(D)
+    ok = pos[:, None, None, :] <= q_pos[:, None, None, None]
+    if window is not None:
+        ok &= pos[:, None, None, :] > (q_pos[:, None, None, None] - window)
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v)
+
+
+def ssd_scan_ref(x, log_a, b, c):
+    """Naive recurrence. x [BH,S,P]; log_a [BH,S]; b/c [BH,S,N]."""
+    BH, S, P = x.shape
+    N = b.shape[-1]
+
+    def step(h, inputs):
+        xt, lat, bt, ct = inputs
+        h = jnp.exp(lat)[:, None, None] * h + \
+            jnp.einsum("gp,gn->gpn", xt, bt)
+        y = jnp.einsum("gpn,gn->gp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((BH, P, N), jnp.float32)
+    h, ys = jax.lax.scan(
+        step, h0,
+        (x.swapaxes(0, 1), log_a.swapaxes(0, 1), b.swapaxes(0, 1),
+         c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h
+
+
+def online_softmax_ref(x):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)

@@ -1,0 +1,100 @@
+"""Chunked SSD (Mamba-2) scan kernel for the hybrid/SSM architectures.
+
+Grid: (B*H, n_chunks) — chunks innermost & sequential; the inter-chunk
+recurrent state h [P, N] lives in VMEM scratch and carries across grid
+steps (TPU grids iterate the trailing axis sequentially per leading
+index, so the carry is sound).  Within a chunk everything is dense
+matmuls (the paper's "batched small GEMM" workload class for CIM).
+
+Inputs (heads pre-broadcast, dt pre-applied):
+    x     [BH, S, P]   (dt-scaled inputs)
+    log_a [BH, S]      (per-step log decay)
+    b, c  [BH, S, N]
+Outputs:
+    y     [BH, S, P]
+    final [BH, P, N]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, fin_ref, h_ref, *,
+                chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0]                     # [chunk, P]
+    la = la_ref[0]                   # [chunk]
+    b = b_ref[0]                     # [chunk, N]
+    c = c_ref[0]                     # [chunk, N]
+
+    cum = jnp.cumsum(la)             # [chunk]
+    # intra-chunk: L[t, s] = exp(cum t - cum s) for s <= t
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [t, s]
+    y_diag = jax.lax.dot_general(cb * L, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # carried-state contribution: y_off[t] = exp(cum[t]) * c[t] . h
+    h = h_ref[...]                   # [P, N]
+    ch = jax.lax.dot_general(c, h, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [t, P]
+    y_off = jnp.exp(cum)[:, None] * ch
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: h' = exp(cum[-1]) h + sum_s exp(cum[-1]-cum[s]) x_s b_s^T
+    decay_out = jnp.exp(cum[-1] - cum)              # [chunk]
+    xw = x * decay_out[:, None]
+    new_state = jax.lax.dot_general(xw, b, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    h_ref[...] = jnp.exp(cum[-1]) * h + new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        fin_ref[0] = h_ref[...].astype(fin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, log_a: jax.Array, b: jax.Array, c: jax.Array,
+             chunk: int = 128, interpret: bool = False):
+    """Returns (y [BH, S, P], final_state [BH, P, N])."""
+    BH, S, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    grid = (BH, n_chunks)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda g, ci: (g, ci)),
+            pl.BlockSpec((1, chunk, N), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda g, ci: (g, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, P, N), lambda g, ci: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, log_a, b, c)

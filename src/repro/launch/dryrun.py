@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import: jax locks the host
+# platform device count at first initialization.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the exact
+production step (train_step / prefill / decode) against the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, with full parameter /
+optimizer / cache shardings; print ``memory_analysis()`` (proves fit) and
+``cost_analysis()`` (roofline terms), parse collective bytes from the
+optimized HLO, and write one JSON record per cell into
+``experiments/dryrun/``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, ASSIGNED_SHAPES, SHAPES, \
+    cell_applicable, get_config
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.steps import build_step
+from repro.parallel.sharding import DEFAULT_RULES
+
+OUT_DIR = Path("experiments/dryrun")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             rules=None, verbose: bool = True, kv_int8: bool = False,
+             replicate_params: bool = False) -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if replicate_params:
+        # serving-side: small models skip FSDP entirely (kills the
+        # per-layer parameter all-gathers)
+        rules = dict(rules or DEFAULT_RULES, fsdp=())
+    cell = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                    "variant": {"kv_int8": kv_int8,
+                                "replicate_params": replicate_params}}
+
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        return record
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    try:
+        with mesh:
+            bundle = build_step(cfg, mesh, shape, rules)
+            lowered = bundle.fn.lower(*bundle.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+    except Exception as e:  # noqa: BLE001 - report per-cell failures
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        return record
+
+    mem_d = {
+        "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    mem_d["total_bytes_per_device"] = (
+        mem_d["argument_bytes_per_device"] + mem_d["output_bytes_per_device"]
+        + mem_d["temp_bytes_per_device"])
+
+    report = rf.analyze(arch, shape, mesh_name, chips, cost, hlo, cfg, cell)
+    record.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem_d,
+        cost={k: cost.get(k) for k in ("flops", "bytes accessed",
+                                       "transcendentals")},
+        roofline=report.row(),
+        params=cfg.param_count(),
+        hlo_collectives=report.collective_counts,
+    )
+    if verbose:
+        gb = mem_d["total_bytes_per_device"] / 2**30
+        print(f"[{arch} x {shape} x {mesh_name}] OK "
+              f"compile={t_compile:.0f}s mem/dev={gb:.2f}GiB "
+              f"bottleneck={report.bottleneck} "
+              f"roofline={report.roofline_fraction:.3f}")
+        print("  memory_analysis:", json.dumps(mem_d))
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (report.hlo_flops, report.hlo_bytes))
+        print("  collectives:", report.collective_counts,
+              "wire_bytes=%.3e" % report.collective_wire_bytes)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache variant (perf iteration)")
+    ap.add_argument("--replicate-params", action="store_true",
+                    help="no-FSDP serving variant (perf iteration)")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in ASSIGNED_SHAPES:
+                cells.append((arch, shape, False))
+                if not args.single_pod_only:
+                    cells.append((arch, shape, True))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required unless --all")
+        meshes = [args.multi_pod] if (args.multi_pod or
+                                      args.single_pod_only) else [False, True]
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, mp, kv_int8=args.kv_int8,
+                       replicate_params=args.replicate_params)
+        suffix = ""
+        if args.kv_int8:
+            suffix += "__kvint8"
+        if args.replicate_params:
+            suffix += "__repl"
+        name = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}{suffix}.json"
+        (out_dir / name).write_text(json.dumps(rec, indent=2, default=str))
+        if rec["status"] == "failed":
+            failures += 1
+            print(f"[{arch} x {shape}] FAILED: {rec['error']}")
+        elif rec["status"] == "skipped":
+            print(f"[{arch} x {shape}] SKIPPED: {rec['reason']}")
+    print(f"\ndone: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

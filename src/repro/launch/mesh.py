@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch JAX device state.  The dry-run entry point
+(dryrun.py) sets XLA_FLAGS host-device-count *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1x1 mesh over the single real CPU device (tests/benches)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,162 @@
+"""Step functions (train / prefill / decode) with full sharding plumbing.
+
+Everything here works equally with concrete arrays and
+ShapeDtypeStructs: `build_*` returns (jitted_fn, abstract_args) so the
+dry-run lowers the exact production step, and train.py/serve.py execute
+the same object.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import ModelConfig, SHAPES, input_specs
+from repro.configs.shapes import ShapeCell
+from repro.models import build_model
+from repro.parallel.context import sharding_context
+from repro.parallel.sharding import (DEFAULT_RULES, input_shardings,
+                                     make_shardings, replicated)
+
+
+@dataclass
+class StepBundle:
+    fn: Any                     # jitted step function
+    args: tuple                 # abstract (or concrete) arguments
+    model: Any
+    kind: str
+
+
+def optimizer_config(cfg: ModelConfig) -> optim.AdamWConfig:
+    # XXL models keep moments in bf16 so training state fits HBM.
+    big = cfg.param_count() > 1e11
+    return optim.AdamWConfig(learning_rate=3e-4,
+                             moment_dtype="bfloat16" if big else "float32")
+
+
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, mesh, shape: str = "train_4k",
+                     rules: Optional[dict] = None,
+                     donate: bool = True) -> StepBundle:
+    rules = rules or DEFAULT_RULES
+    model = build_model(cfg)
+    ocfg = optimizer_config(cfg)
+    apply_update = optim.update(ocfg)
+
+    mb = max(1, cfg.train_microbatches)
+
+    def train_step(params, opt_state, batch):
+        with sharding_context(mesh, rules):
+            if mb == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch)
+            else:
+                # gradient accumulation: scan over microbatches; grads
+                # accumulate in f32 (sharded like params)
+                micro = jax.tree.map(
+                    lambda a: a.reshape(mb, a.shape[0] // mb, *a.shape[1:]),
+                    batch)
+
+                def acc_fn(carry, mbatch):
+                    gsum, lsum = carry
+                    (l, met), g = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, mbatch)
+                    gsum = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                    return (gsum, lsum + l), met
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), mets = jax.lax.scan(
+                    acc_fn, (g0, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / mb, gsum)
+                loss = lsum / mb
+                metrics = jax.tree.map(lambda m: m[-1], mets)
+            params, opt_state, om = apply_update(grads, opt_state, params)
+            metrics = dict(metrics, **om, loss=loss)
+            return params, opt_state, metrics
+
+    pshapes, paxes = model.abstract_params()
+    psh = make_shardings(mesh, pshapes, paxes, rules)
+    oshapes = jax.eval_shape(functools.partial(optim.init, ocfg), pshapes)
+    oaxes = {"mu": paxes, "nu": paxes, "step": ()}
+    osh = make_shardings(mesh, oshapes, oaxes, rules)
+    bspecs = input_specs(cfg, shape)
+    bsh = input_shardings(mesh, bspecs, rules)
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return StepBundle(jitted, (pshapes, oshapes, bspecs), model, "train")
+
+
+def _cache_shardings(model, mesh, batch: int, max_len: int, rules):
+    cshapes = model.abstract_cache(batch, max_len)
+    caxes = model.cache_axes()
+    return cshapes, make_shardings(mesh, cshapes, caxes, rules)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: str = "prefill_32k",
+                       rules: Optional[dict] = None) -> StepBundle:
+    rules = rules or DEFAULT_RULES
+    model = build_model(cfg)
+    cell = SHAPES[shape]
+
+    def prefill_step(params, batch, cache):
+        with sharding_context(mesh, rules):
+            logits, cache = model.prefill_last(params, batch, cache)
+            return logits, cache
+
+    pshapes, paxes = model.abstract_params()
+    psh = make_shardings(mesh, pshapes, paxes, rules)
+    bspecs = input_specs(cfg, shape)
+    bsh = input_shardings(mesh, bspecs, rules)
+    cshapes, csh = _cache_shardings(model, mesh, cell.global_batch,
+                                    cell.seq_len, rules)
+
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(psh, bsh, csh),
+                     out_shardings=(None, csh),
+                     donate_argnums=(2,))
+    return StepBundle(jitted, (pshapes, bspecs, cshapes), model, "prefill")
+
+
+def build_decode_step(cfg: ModelConfig, mesh, shape: str = "decode_32k",
+                      rules: Optional[dict] = None) -> StepBundle:
+    rules = rules or DEFAULT_RULES
+    model = build_model(cfg)
+    cell = SHAPES[shape]
+
+    def decode_step(params, batch, cache):
+        with sharding_context(mesh, rules):
+            return model.decode_step(params, batch, cache)
+
+    pshapes, paxes = model.abstract_params()
+    psh = make_shardings(mesh, pshapes, paxes, rules)
+    bspecs = input_specs(cfg, shape)
+    bsh = input_shardings(mesh, bspecs, rules)
+    cshapes, csh = _cache_shardings(model, mesh, cell.global_batch,
+                                    cell.seq_len, rules)
+
+    jitted = jax.jit(decode_step,
+                     in_shardings=(psh, bsh, csh),
+                     out_shardings=(None, csh),
+                     donate_argnums=(2,))
+    return StepBundle(jitted, (pshapes, bspecs, cshapes), model, "decode")
+
+
+def build_step(cfg: ModelConfig, mesh, shape: str,
+               rules: Optional[dict] = None) -> StepBundle:
+    cell = SHAPES[shape]
+    if cell.step == "train":
+        return build_train_step(cfg, mesh, shape, rules)
+    if cell.step == "prefill":
+        return build_prefill_step(cfg, mesh, shape, rules)
+    return build_decode_step(cfg, mesh, shape, rules)

@@ -1,0 +1,67 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+        --reduced --steps 50 --batch 8 --seq 64
+
+On this CPU container ``--reduced`` trains the smoke-scale config of the
+chosen architecture end-to-end (real data pipeline, optimizer,
+checkpointing, straggler detection).  On a TPU fleet the same driver
+builds the production mesh and the sharded train step from
+repro.launch.steps.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.data import for_model
+from repro.models import build_model
+from repro.training import Trainer, TrainerConfig, simple_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default="checkpoints/train")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"layers={cfg.n_layers} groups={len(cfg.layer_groups())}")
+
+    ocfg = optim.AdamWConfig(learning_rate=args.lr)
+    opt_state = optim.init(ocfg, params)
+    step = simple_train_step(model, ocfg)
+    pipe = for_model(cfg, batch=args.batch, seq_len=args.seq,
+                     seed=args.seed)
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         checkpoint_every=args.checkpoint_every,
+                         log_every=5, checkpoint_dir=args.checkpoint_dir)
+    trainer = Trainer(model, step, params, opt_state, pipe, tcfg)
+    out = trainer.run()
+    print(json.dumps({"final_step": out["final_step"],
+                      "final_loss": out["final_loss"],
+                      "stragglers": len(out["stragglers"])}))
+    for rec in out["history"]:
+        print(f"  step {rec['step']:5d} loss {rec['loss']:.4f} "
+              f"dt {rec['dt']*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""JAX model zoo: unified causal-LM stack covering the 10 assigned
+architectures (dense GQA/MQA, local:global, MLA, MoE, Mamba2 hybrid,
+xLSTM, audio/VLM backbones).
+
+Lazy exports to avoid a configs <-> models import cycle (configs.base
+pulls the per-family sub-config dataclasses from the leaf modules).
+"""
+
+
+def __getattr__(name):
+    if name in ("Model", "build_model"):
+        from .model import Model, build_model
+        return {"Model": Model, "build_model": build_model}[name]
+    if name in ("Param", "param_axes", "param_values"):
+        from . import layers
+        return getattr(layers, name)
+    raise AttributeError(name)
+
+
+__all__ = ["Model", "build_model", "Param", "param_axes", "param_values"]

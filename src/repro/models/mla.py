@@ -1,0 +1,162 @@
+"""Multi-head Latent Attention (DeepSeek-V3 / arXiv:2412.19437).
+
+Two execution paths share one parameter set:
+
+* prefill/train — latents are up-projected to per-head K/V and fed to the
+  standard (blockwise) attention path.
+* decode — the *absorbed* form: queries are folded through W_uk so scores
+  are taken directly against the cached latent ``c_kv`` (plus the shared
+  rope key), and outputs are folded through W_uv.  The cache stores only
+  ``kv_lora_rank + rope_head_dim`` per token — this is what makes the
+  long_500k cell feasible, and is exactly the GEMV-shaped workload the
+  paper's CIM-MXU accelerates (latent decode = one big GEMV per step).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, blockwise_attention, dense_attention
+from .layers import Param, apply_rope, linear_param, rmsnorm_init, rmsnorm_apply
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def mla_init(key, d_model: int, n_heads: int, cfg: MLAConfig,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "q_down": linear_param(ks[0], d_model, (cfg.q_lora_rank,),
+                               ("fsdp", None), dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank),
+        "q_up": linear_param(ks[1], cfg.q_lora_rank, (n_heads, nope + rope),
+                             (None, "heads", None), dtype),
+        # kv_down emits [c_kv (kv_lora) | k_rope (rope)] in one projection
+        "kv_down": linear_param(ks[2], d_model, (cfg.kv_lora_rank + rope,),
+                                ("fsdp", None), dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "kv_up": linear_param(ks[3], cfg.kv_lora_rank, (n_heads, nope + vdim),
+                              (None, "heads", None), dtype),
+        "o": Param(
+            linear_param(ks[4], n_heads * vdim, (d_model,), (), dtype)
+            .value.reshape(n_heads, vdim, d_model),
+            ("heads", None, "fsdp")),
+    }
+
+
+def _project_q(params, x, cfg: MLAConfig, positions, rope_theta):
+    cq = jnp.einsum("bsd,dr->bsr", x, params["q_down"])
+    cq = rmsnorm_apply(params["q_norm"], cq)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["q_up"])
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg: MLAConfig, positions, rope_theta):
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["kv_down"])
+    c_kv = rmsnorm_apply(params["kv_norm"], ckv[..., : cfg.kv_lora_rank])
+    k_rope = ckv[..., cfg.kv_lora_rank:][:, :, None, :]    # shared head
+    k_rope = apply_rope(k_rope, positions, rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: MLAConfig,
+    *,
+    rope_theta: float = 10000.0,
+    cache: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    B, S, _ = x.shape
+    H = params["q_up"].shape[1]
+    nope, vdim = cfg.qk_nope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(cfg.qk_head_dim)
+
+    q_nope, q_rope = _project_q(params, x, cfg, positions, rope_theta)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions, rope_theta)
+
+    if cache is None:
+        # Materialized path: standard MHA over up-projected K/V.
+        kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["kv_up"])
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, cfg.qk_rope_head_dim))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if S <= 2048:
+            out = dense_attention(q, k, v, positions, positions, "causal")
+        else:
+            out = blockwise_attention(q, k, v, positions, positions, "causal")
+        o = jnp.einsum("bshv,hvd->bsd", out.astype(x.dtype), params["o"])
+        return o, None
+
+    # ------------------------------------------------------------------
+    # Absorbed decode: score/value directly against the latent cache.
+    # ------------------------------------------------------------------
+    idx = cache["index"]                 # [B] per-slot indices
+    c_cache = jax.vmap(
+        lambda b, n, i: jax.lax.dynamic_update_slice(b, n, (i, 0)))(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx)
+    r_cache = jax.vmap(
+        lambda b, n, i: jax.lax.dynamic_update_slice(b, n, (i, 0)))(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx)
+    new_cache = {"c_kv": c_cache, "k_rope": r_cache, "index": idx + S}
+
+    w_uk = params["kv_up"][..., :nope]          # [r, H, nope]
+    w_uv = params["kv_up"][..., nope:]          # [r, H, v]
+    # Fold queries through W_uk: q_lat [B, S, H, r]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                   c_cache.astype(jnp.float32))
+        + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                     r_cache.astype(jnp.float32))
+    ) * scale
+    t_pos = jnp.arange(c_cache.shape[1])[None, None, None, :]
+    valid = t_pos <= positions[:, None, :, None]
+    valid &= t_pos < (idx[:, None, None, None] + S)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(c_cache.dtype), c_cache)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)
+    o = jnp.einsum("bshv,hvd->bsd", out.astype(x.dtype), params["o"])
+    return o, new_cache
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_cache_logical_axes() -> dict:
+    # latent cache is sharded over sequence for long-context decode
+    # (context parallelism) — the resolver maps "kv_seq" appropriately.
+    return {
+        "c_kv": ("batch", "kv_seq", None),
+        "k_rope": ("batch", "kv_seq", None),
+        "index": ("batch",),
+    }

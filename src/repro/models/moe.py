@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN: shared + routed top-k experts, EP-shardable.
+
+Sort-based dispatch (no [T, E, C] one-hot): token-expert assignments are
+argsorted by expert, positions-within-expert computed via searchsorted,
+tokens scattered into per-expert capacity buffers [E, C, d], run through
+batched expert GEMMs (einsum over the expert dim — shardable over the
+``expert`` logical axis), and gathered back with gate weighting.
+Capacity overflow drops tokens (GShard semantics); a Switch-style
+load-balance auxiliary is returned for the training loss.
+
+Covers qwen2-moe (60 routed top-4 + 4 shared) and deepseek-v3 (256 routed
+top-8 + 1 shared, sigmoid scoring simplified to softmax — noted in
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Param, mlp_init, mlp_apply, truncated_normal_init
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_routed_experts: int
+    top_k: int
+    d_expert: int                  # per-expert FFN hidden size
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0           # hidden size of the shared expert MLP
+    capacity_factor: float = 1.25
+    norm_topk_prob: bool = True
+    aux_loss_coef: float = 0.001
+    first_k_dense: int = 0         # leading dense layers (deepseek-v3: 3)
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, activation: str = "swiglu",
+             dtype=jnp.bfloat16) -> dict:
+    kr, ku, kg, kd, ks = jax.random.split(key, 5)
+    E, F = cfg.n_routed_experts, cfg.d_expert
+    gated = activation in ("geglu", "swiglu")
+    scale = 1.0 / (d_model ** 0.5)
+    p = {
+        "router": Param(
+            truncated_normal_init(kr, (d_model, E), jnp.float32, scale),
+            ("fsdp", None)),
+        "up": Param(truncated_normal_init(ku, (E, d_model, F), dtype, scale),
+                    ("expert", "fsdp", "mlp")),
+        "down": Param(
+            truncated_normal_init(kd, (E, F, d_model), dtype, 1.0 / F ** 0.5),
+            ("expert", "mlp", "fsdp")),
+    }
+    if gated:
+        p["gate"] = Param(
+            truncated_normal_init(kg, (E, d_model, F), dtype, scale),
+            ("expert", "fsdp", "mlp"))
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks, d_model,
+                               cfg.shared_d_ff or cfg.d_expert *
+                               cfg.n_shared_experts, activation, dtype)
+    return p
+
+
+def _activate(name: str, x):
+    if name in ("gelu", "geglu"):
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: MoEConfig,
+              activation: str = "swiglu",
+              capacity: Optional[int] = None) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    GShard-style *grouped* dispatch: each batch row is a dispatch group
+    with its own capacity (C = S*K/E * factor), so the capacity buffers
+    are [B, E, C, d] — shardable over batch x expert (512-way on the
+    production mesh) instead of one global [E, C_global, d] monolith.
+    """
+    from repro.parallel.context import shard
+
+    B, S, d = x.shape
+    E, K = cfg.n_routed_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)          # [B, S, K]
+    if cfg.norm_topk_prob:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- Switch-style load-balance auxiliary (global) -------------------
+    me = jnp.mean(probs, axis=(0, 1))                         # router mass
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))                                          # token fraction
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- per-row sort-based dispatch ------------------------------------
+    if capacity is None:
+        capacity = int(S * K / E * cfg.capacity_factor) + 1
+    n = S * K
+    flat_e = expert_ids.reshape(B, n)
+    flat_g = gate_vals.reshape(B, n)
+    tok_of = jnp.broadcast_to(jnp.arange(n) // K, (B, n))
+
+    order = jnp.argsort(flat_e, axis=1)
+    se = jnp.take_along_axis(flat_e, order, axis=1)           # [B, n]
+    st = jnp.take_along_axis(tok_of, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    pos = jnp.arange(n)[None, :] - first
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, 0)
+
+    # scatter tokens into per-row capacity buffers [B, E, C, d]
+    xe = jnp.zeros((B, E, capacity, d), x.dtype)
+    upd = jnp.where(keep[..., None],
+                    jnp.take_along_axis(x, st[..., None], axis=1), 0)
+    xe = jax.vmap(lambda buf, e, p, u: buf.at[e, p].add(u, mode="drop"))(
+        xe, se, pos_c, upd.astype(x.dtype))
+    xe = shard(xe, ("batch", "expert", None, None))
+
+    # ---- batched expert FFN (einsum over expert axis; EP-shardable) ----
+    up = jnp.einsum("becd,edf->becf", xe, params["up"])
+    if "gate" in params:
+        g = jnp.einsum("becd,edf->becf", xe, params["gate"])
+        h = _activate(activation, g) * up
+    else:
+        h = _activate(activation, up)
+    h = shard(h, ("batch", "expert", None, "mlp"))
+    ye = jnp.einsum("becf,efd->becd", h, params["down"])
+    ye = shard(ye, ("batch", "expert", None, None))
+
+    # ---- gather + gate-weighted combine ---------------------------------
+    back = jax.vmap(lambda buf, e, p: buf[e, p])(ye, se, pos_c)  # [B, n, d]
+    back = jnp.where(keep[..., None], back, 0) * sg[..., None].astype(ye.dtype)
+    out = jax.vmap(lambda o, t, u: o.at[t].add(u, mode="drop"))(
+        jnp.zeros((B, S, d), ye.dtype), st, back)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(params["shared"], x, activation)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,224 @@
+"""Mamba-2 (SSD) blocks — arXiv:2405.21060 — for zamba2-style hybrids.
+
+Training/prefill uses the chunked SSD algorithm (matmul-rich: exactly the
+structure the paper's CIM-MXU evaluates as batched small GEMMs); decode is
+the O(1) recurrent update h = dA*h + dt*B xᵀ, y = C·h — a pure GEMV
+workload.  The pure-jnp chunked path is the oracle for the Pallas
+``ssd_scan`` kernel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Param, linear_param, rmsnorm_apply, scale_param, \
+    truncated_normal_init
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    n_groups: int = 1
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+    def conv_dim(self, d_model: int) -> int:
+        return self.d_inner(d_model) + 2 * self.n_groups * self.state_dim
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (minimal reference form, Mamba-2 paper listing 1)
+# ---------------------------------------------------------------------------
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., T] -> lower-triangular pairwise cumulative sums [..., T, T]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, log_a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, initial_state: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked state-space dual form.
+
+    x:     [B, S, H, P]   (dt-scaled inputs)
+    log_a: [B, S, H]      (per-step log decay, dt * A)
+    b, c:  [B, S, G, N]   (G groups broadcast over heads)
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).  S % chunk == 0.
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    ac = log_a.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)   # [B,H,c,l]
+    bc = b.reshape(B, nc, chunk, G, N)
+    cc = c.reshape(B, nc, chunk, G, N)
+    bch = jnp.repeat(bc, rep, axis=3)                            # [B,c,l,H,N]
+    cch = jnp.repeat(cc, rep, axis=3)
+
+    a_cumsum = jnp.cumsum(ac, axis=-1)                           # [B,H,c,l]
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ac))                                     # [B,H,c,l,l]
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        cch, bch, L, xc)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)        # [B,H,c,l]
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bch, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), states.dtype)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)
+    chunk_decay = a_cumsum[..., -1]                              # [B,H,c]
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(padded))                       # [B,H,c+1,c+1]
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output contribution
+    state_decay_out = jnp.exp(a_cumsum)                          # [B,H,c,l]
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cch, states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+def mamba2_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    cd = cfg.conv_dim(d_model)
+    proj_out = 2 * di + 2 * cfg.n_groups * cfg.state_dim + H
+    return {
+        "in_proj": linear_param(ks[0], d_model, (proj_out,), ("fsdp", "mlp"),
+                                dtype),
+        "conv_w": Param(
+            truncated_normal_init(ks[1], (cfg.conv_kernel, cd), dtype, 0.1),
+            (None, "mlp")),
+        "conv_b": Param(jnp.zeros((cd,), dtype), ("mlp",)),
+        "a_log": Param(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+                       ("heads",)),
+        "d_skip": Param(jnp.ones((H,), jnp.float32), ("heads",)),
+        "dt_bias": Param(jnp.zeros((H,), jnp.float32), ("heads",)),
+        "norm": {"scale": scale_param(di)},
+        "out_proj": linear_param(ks[2], di, (d_model,), ("mlp", "fsdp"), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]; tail: [B, K-1, C]."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_apply(params: dict, x: jax.Array, cfg: SSMConfig,
+                 cache: Optional[dict] = None
+                 ) -> tuple[jax.Array, Optional[dict]]:
+    """x: [B, S, d]. cache: {"conv": [B,K-1,conv_dim], "ssm": [B,H,P,N]}."""
+    B, S, D = x.shape
+    di = cfg.d_inner(D)
+    H = cfg.n_heads(D)
+    P, N, G = cfg.head_dim, cfg.state_dim, cfg.n_groups
+    K = cfg.conv_kernel
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc_raw = zxbcdt[..., di: di + cfg.conv_dim(D)]
+    dt = zxbcdt[..., -H:]
+
+    tail_in = cache["conv"] if cache is not None else None
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"], tail_in)
+    if cache is not None:
+        if tail_in is None:
+            tail_in = jnp.zeros((B, K - 1, xbc_raw.shape[-1]), xbc_raw.dtype)
+        new_tail = jnp.concatenate(
+            [tail_in, xbc_raw.astype(tail_in.dtype)], axis=1)[:, -(K - 1):]
+
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    b = xbc[..., di: di + G * N].reshape(B, S, G, N)
+    c = xbc[..., di + G * N:].reshape(B, S, G, N)
+
+    a = -jnp.exp(params["a_log"])                                # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    log_a = dt * a                                               # [B,S,H]
+    x_scaled = (xs.astype(jnp.float32) * dt[..., None])
+
+    new_cache = None
+    if cache is None or S > 1:
+        xp, lp, bp, cp = x_scaled, log_a, b, c
+        pad = (-S) % cfg.chunk
+        if pad:
+            xp = jnp.pad(xp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            lp = jnp.pad(lp, ((0, 0), (0, pad), (0, 0)))
+            bp = jnp.pad(bp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cp = jnp.pad(cp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        init = cache["ssm"].astype(jnp.float32) if cache is not None else None
+        y, final = ssd_chunked(xp, lp, bp.astype(jnp.float32),
+                               cp.astype(jnp.float32), cfg.chunk, init)
+        y = y[:, :S]
+        if cache is not None:
+            new_cache = {"conv": new_tail,
+                         "ssm": final.astype(cache["ssm"].dtype),
+                         "index": cache["index"] + S}
+    else:
+        # O(1) decode: h = exp(dt*a) h + (dt*b) x ; y = c . h   (pure GEMV)
+        h = cache["ssm"].astype(jnp.float32)                     # [B,H,P,N]
+        da = jnp.exp(log_a[:, 0])                                # [B,H]
+        bh = jnp.repeat(b[:, 0], H // G, axis=1)                 # [B,H,N]
+        ch = jnp.repeat(c[:, 0], H // G, axis=1)
+        h = h * da[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_scaled[:, 0], bh.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", h, ch.astype(jnp.float32))[:, None]
+        new_cache = {"conv": new_tail, "ssm": h.astype(cache["ssm"].dtype),
+                     "index": cache["index"] + 1}
+
+    y = y + xs.astype(jnp.float32) * params["d_skip"][:, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(params["norm"], y)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, new_cache
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype=jnp.bfloat16) -> dict:
+    H = cfg.n_heads(d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.conv_dim(d_model)),
+                          dtype),
+        "ssm": jnp.zeros((batch, H, cfg.head_dim, cfg.state_dim), jnp.float32),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def ssm_cache_logical_axes() -> dict:
+    return {
+        "conv": ("batch", None, "mlp"),
+        "ssm": ("batch", "heads", None, None),
+        "index": ("batch",),
+    }

@@ -1,0 +1,269 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-
+parallel) and sLSTM (scalar memory, sequential scan with exponential
+gating).  Decode for both is O(1)-state — the workload class the paper's
+CIM-MXU GEMV path targets (state read/update = matrix-vector work).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Param, linear_param, mlp_apply, mlp_init, rmsnorm_apply, \
+    scale_param, truncated_normal_init
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    n_heads: int = 4
+    conv_kernel: int = 4
+    chunk: int = 64
+    mlstm_proj_factor: float = 2.0
+    slstm_ffn_factor: float = 4.0 / 3.0
+    slstm_every: int = 8      # one sLSTM block per this many layers (0 = none)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: chunkwise-parallel matrix-memory cell
+# ---------------------------------------------------------------------------
+def _mlstm_chunk_step(carry, inputs, scale):
+    """Process one chunk. carry: (C [B,H,Dk,Dv], n [B,H,Dk], m [B,H])."""
+    C, n, m = carry
+    q, k, v, ig, lf = inputs      # q,k,v: [B,L,H,D]; ig, lf: [B,L,H]
+    B, L, H, D = q.shape
+    q = q * scale                 # one global 1/sqrt(D); intra+inter terms
+
+    cum = jnp.cumsum(lf, axis=1)                    # [B,L,H]
+    # decay from step s to step t (t >= s): cum[t] - cum[s]
+    d_mat = cum[:, :, None] - cum[:, None, :] + ig[:, None, :, :]  # [B,t,s,H]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    d_mat = jnp.where(tri[None, :, :, None], d_mat, -jnp.inf)
+    b_vec = cum + m[:, None]                        # carried-state weight [B,L,H]
+
+    m_new = jnp.maximum(jnp.max(d_mat, axis=2), b_vec)          # [B,L,H]
+    m_new = jnp.maximum(m_new, -1e30)
+
+    intra = jnp.einsum("blhd,bshd->blsh", q, k)                 # [B,L,S,H]
+    intra = intra * jnp.exp(d_mat - m_new[:, :, None])
+    inter_w = jnp.exp(b_vec - m_new)                            # [B,L,H]
+
+    num = jnp.einsum("blsh,bshd->blhd", intra, v) \
+        + jnp.einsum("blhd,bhdv->blhv", q, C) * inter_w[..., None]
+    den = jnp.einsum("blsh->blh", intra) \
+        + jnp.einsum("blhd,bhd->blh", q, n) * inter_w
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+
+    # chunk-final state update
+    m_next = jnp.maximum(m + cum[:, -1], jnp.max(cum[:, -1:, :] - cum + ig,
+                                                 axis=1))
+    decay_C = jnp.exp(m + cum[:, -1] - m_next)                  # [B,H]
+    w_s = jnp.exp(cum[:, -1:, :] - cum + ig - m_next[:, None])  # [B,L,H]
+    C_next = C * decay_C[..., None, None] + jnp.einsum(
+        "bshd,bshv,bsh->bhdv", k, v, w_s)
+    n_next = n * decay_C[..., None] + jnp.einsum("bshd,bsh->bhd", k, w_s)
+    return (C_next, n_next, m_next), h
+
+
+def mlstm_scan(q, k, v, ig, fg, chunk: int,
+               state: Optional[tuple] = None):
+    """q,k,v: [B,S,H,D] (f32); ig/fg preactivations [B,S,H].
+    Returns (h [B,S,H,D], final_state)."""
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    lf = jax.nn.log_sigmoid(fg)
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // chunk
+
+    def to_chunks(a):
+        return a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    if state is None:
+        state = (jnp.zeros((B, H, D, D), jnp.float32),
+                 jnp.zeros((B, H, D), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    (C, n, m), hs = jax.lax.scan(
+        lambda c, i: _mlstm_chunk_step(c, i, scale), state,
+        tuple(map(to_chunks, (q, k, v, ig, lf))))
+    h = hs.swapaxes(0, 1).reshape(B, nc * chunk, H, D)[:, :S]
+    return h, (C, n, m)
+
+
+def mlstm_decode_step(q, k, v, ig, fg, state):
+    """Single-token update. q,k,v: [B,1,H,D]; gates [B,1,H]."""
+    C, n, m = state
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    lf = jax.nn.log_sigmoid(fg)[:, 0]
+    ig = ig[:, 0]
+    m_new = jnp.maximum(lf + m, ig)
+    f_p = jnp.exp(lf + m - m_new)
+    i_p = jnp.exp(ig - m_new)
+    C = C * f_p[..., None, None] + jnp.einsum(
+        "bhd,bhv,bh->bhdv", k[:, 0], v[:, 0], i_p)
+    n = n * f_p[..., None] + k[:, 0] * i_p[..., None]
+    num = jnp.einsum("bhd,bhdv->bhv", q[:, 0] * scale, C)
+    den = jnp.einsum("bhd,bhd->bh", q[:, 0] * scale, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h[:, None], (C, n, m_new)
+
+
+def mlstm_block_init(key, d_model: int, cfg: XLSTMConfig,
+                     dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 8)
+    di = int(cfg.mlstm_proj_factor * d_model)
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "up": linear_param(ks[0], d_model, (2 * di,), ("fsdp", "mlp"), dtype),
+        "conv_w": Param(truncated_normal_init(ks[1], (cfg.conv_kernel, di),
+                                              dtype, 0.1), (None, "mlp")),
+        "conv_b": Param(jnp.zeros((di,), dtype), ("mlp",)),
+        "q": linear_param(ks[2], di, (H, dh), ("mlp", "heads", None), dtype),
+        "k": linear_param(ks[3], di, (H, dh), ("mlp", "heads", None), dtype),
+        "v": linear_param(ks[4], di, (H, dh), ("mlp", "heads", None), dtype),
+        "igate": linear_param(ks[5], di, (H,), (None, "heads"), jnp.float32),
+        "fgate": Param(jnp.zeros((di, H), jnp.float32), (None, "heads")),
+        "fgate_b": Param(jnp.full((H,), 3.0, jnp.float32), ("heads",)),
+        "norm": {"scale": scale_param(di)},
+        "down": linear_param(ks[6], di, (d_model,), ("mlp", "fsdp"), dtype),
+    }
+
+
+def mlstm_block_apply(params, x, cfg: XLSTMConfig,
+                      cache: Optional[dict] = None):
+    """x: [B,S,d]. cache: {"conv": [B,K-1,di], "C","n","m", "index"}."""
+    B, S, D = x.shape
+    di = int(cfg.mlstm_proj_factor * D)
+    K = cfg.conv_kernel
+
+    up = jnp.einsum("bsd,dk->bsk", x, params["up"])
+    u, z = up[..., :di], up[..., di:]
+
+    tail_in = cache["conv"] if cache is not None else \
+        jnp.zeros((B, K - 1, di), u.dtype)
+    xp = jnp.concatenate([tail_in.astype(u.dtype), u], axis=1)
+    conv = sum(xp[:, i: i + S] * params["conv_w"][i] for i in range(K))
+    conv = jax.nn.silu(conv + params["conv_b"])
+
+    q = jnp.einsum("bsk,khd->bshd", conv, params["q"]).astype(jnp.float32)
+    k = jnp.einsum("bsk,khd->bshd", conv, params["k"]).astype(jnp.float32)
+    v = jnp.einsum("bsk,khd->bshd", u, params["v"]).astype(jnp.float32)
+    ig = jnp.einsum("bsk,kh->bsh", conv.astype(jnp.float32), params["igate"])
+    fg = jnp.einsum("bsk,kh->bsh", conv.astype(jnp.float32),
+                    params["fgate"]) + params["fgate_b"]
+
+    if cache is not None and S == 1:
+        state = (cache["C"], cache["n"], cache["m"])
+        h, state = mlstm_decode_step(q, k, v, ig, fg, state)
+    else:
+        state = (cache["C"], cache["n"], cache["m"]) if cache is not None \
+            else None
+        h, state = mlstm_scan(q, k, v, ig, fg, cfg.chunk, state)
+
+    new_cache = None
+    if cache is not None:
+        new_tail = jnp.concatenate(
+            [tail_in, u.astype(tail_in.dtype)], axis=1)[:, -(K - 1):]
+        new_cache = {"conv": new_tail, "C": state[0], "n": state[1],
+                     "m": state[2], "index": cache["index"] + S}
+
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm_apply(params["norm"], h) * jax.nn.silu(z)
+    return jnp.einsum("bsk,kd->bsd", h, params["down"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar-memory recurrent cell (sequential scan)
+# ---------------------------------------------------------------------------
+def slstm_block_init(key, d_model: int, cfg: XLSTMConfig,
+                     dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    H = cfg.n_heads
+    dh = d_model // H
+    ffn_dim = int(cfg.slstm_ffn_factor * d_model)
+    return {
+        "w": linear_param(ks[0], d_model, (4, H, dh),
+                          ("fsdp", None, "heads", None), jnp.float32),
+        "r": Param(truncated_normal_init(ks[1], (4, H, dh, dh), jnp.float32,
+                                         1.0 / math.sqrt(dh)),
+                   (None, "heads", None, None)),
+        "b": Param(jnp.zeros((4, H, dh), jnp.float32), (None, "heads", None)),
+        "norm": {"scale": scale_param(d_model)},
+        "ffn": mlp_init(ks[2], d_model, ffn_dim, "geglu", dtype),
+    }
+
+
+def _slstm_step(params, carry, wx_t):
+    """carry: (c, n, h, m) each [B,H,dh]; wx_t: [B,4,H,dh] preactivations."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h, params["r"]) + params["b"]
+    pre = wx_t + rec                              # [B,4,H,dh]
+    z_t = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = pre[:, 2]
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block_apply(params, x, cfg: XLSTMConfig,
+                      cache: Optional[dict] = None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    wx = jnp.einsum("bsd,dghe->bsghe", x.astype(jnp.float32), params["w"])
+
+    if cache is not None:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        zero = jnp.zeros((B, H, dh), jnp.float32)
+        carry = (zero, zero, zero, jnp.full((B, H, dh), -1e30, jnp.float32))
+
+    carry, hs = jax.lax.scan(
+        lambda c, t: _slstm_step(params, c, t), carry, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    h = rmsnorm_apply(params["norm"], h)
+    out = h + mlp_apply(params["ffn"], h, "geglu")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2],
+                     "m": carry[3], "index": cache["index"] + S}
+    return out, new_cache
+
+
+def init_mlstm_cache(batch: int, d_model: int, cfg: XLSTMConfig,
+                     dtype=jnp.bfloat16) -> dict:
+    di = int(cfg.mlstm_proj_factor * d_model)
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_slstm_cache(batch: int, d_model: int, cfg: XLSTMConfig) -> dict:
+    H = cfg.n_heads
+    dh = d_model // H
+    zero = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero,
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+            "index": jnp.zeros((batch,), jnp.int32)}

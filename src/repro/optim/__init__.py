@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, cosine_schedule, global_norm, init, update
+from .compress import int8_compress_grads, int8_decompress_grads
+
+__all__ = ["AdamWConfig", "cosine_schedule", "global_norm", "init", "update",
+           "int8_compress_grads", "int8_decompress_grads"]

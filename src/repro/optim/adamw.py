@@ -1,0 +1,109 @@
+"""AdamW with dtype-configurable moments, global-norm clipping, and
+weight-decay masking — optax-free (only jax available offline).
+
+Moment dtype matters at scale: 671B-parameter configs keep m/v in
+bfloat16 so the full training state fits the 512-chip memory budget
+(fp32 moments would add 8 bytes/param).  Moments inherit the parameter
+sharding (ZeRO-3 via the "fsdp" logical axis), so optimizer state is
+fully sharded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4          # or a callable schedule via make_*
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"        # "bfloat16" for XXL configs
+
+
+def _mdtype(cfg: AdamWConfig):
+    return jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def init(cfg: AdamWConfig, params: Any) -> dict:
+    dt = _mdtype(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(path: tuple) -> bool:
+    """No weight decay on norms/scales/biases (1-D params)."""
+    name = "/".join(str(p) for p in path)
+    return not any(k in name for k in ("scale", "bias", "a_log", "dt_bias",
+                                       "d_skip", "fgate_b"))
+
+
+def update(cfg: AdamWConfig, schedule: Optional[Callable] = None):
+    """Returns apply(grads, opt_state, params) -> (new_params, new_state,
+    metrics)."""
+
+    def apply(grads, state, params):
+        step = state["step"] + 1
+        lr = cfg.learning_rate if schedule is None else schedule(step)
+
+        gnorm = global_norm(grads)
+        if cfg.clip_norm is not None:
+            scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        dt = _mdtype(cfg)
+
+        flat_g, tdef = jax.tree.flatten_with_path(grads)
+        flat_mu = jax.tree.leaves(state["mu"])
+        flat_nu = jax.tree.leaves(state["nu"])
+        flat_p = jax.tree.leaves(params)
+
+        new_p, new_mu, new_nu = [], [], []
+        for (path, g), mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p):
+            g32 = g.astype(jnp.float32)
+            mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g32
+            nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            upd = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+            if cfg.weight_decay and _decay_mask(path):
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+            new_mu.append(mu32.astype(dt))
+            new_nu.append(nu32.astype(dt))
+
+        tree_p = jax.tree.unflatten(jax.tree.structure(params), new_p)
+        mu_t = jax.tree.unflatten(jax.tree.structure(params), new_mu)
+        nu_t = jax.tree.unflatten(jax.tree.structure(params), new_nu)
+        return tree_p, {"mu": mu_t, "nu": nu_t, "step": step}, \
+            {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+    return apply
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return schedule

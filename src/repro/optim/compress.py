@@ -1,0 +1,39 @@
+"""INT8 gradient compression for the data-parallel all-reduce.
+
+Distributed-optimization trick for the multi-pod regime: gradients are
+per-tensor scaled to int8 before crossing the (slow) pod axis, halving
+(vs bf16) the inter-pod collective bytes, then decompressed for the
+optimizer.  Error stays bounded because AdamW normalizes by sqrt(v).
+
+Used by training.trainer when ``grad_compression="int8"``: the loss
+gradient is computed per-shard, compressed, summed via psum inside
+shard_map (int32 accumulate), then decompressed.  For the GSPMD/pjit
+path we expose quantize/dequantize as a straight-through pair around the
+pmean so XLA still fuses the collective; the compression is then applied
+to the *communicated* representation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress_grads(grads):
+    """tree -> (int8 tree, scales tree)."""
+    def leaf(g):
+        amax = jnp.max(jnp.abs(g.astype(jnp.float32))) + 1e-12
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+        return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+    pairs = jax.tree.map(leaf, grads)
+    qs = jax.tree.map(lambda p: p[0], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return qs, scales
+
+
+def int8_decompress_grads(qs, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q, s: q.astype(dtype) * s.astype(dtype), qs, scales)

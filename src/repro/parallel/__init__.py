@@ -1,0 +1,8 @@
+from .context import shard, sharding_context
+from .pipeline import gpipe_loop, pipeline_apply
+from .sharding import (DEFAULT_RULES, EP_WIDE_RULES, batch_sharding,
+                       input_shardings, make_shardings, resolve_spec)
+
+__all__ = ["shard", "sharding_context", "gpipe_loop", "pipeline_apply",
+           "DEFAULT_RULES", "EP_WIDE_RULES", "batch_sharding",
+           "input_shardings", "make_shardings", "resolve_spec"]

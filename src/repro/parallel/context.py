@@ -1,0 +1,51 @@
+"""Activation-sharding context: model code annotates activations with
+logical axes; under an active context (set by the step builders while
+tracing) the annotation becomes a ``with_sharding_constraint``; with no
+context (CPU smoke tests) it is a no-op.
+
+This pins GSPMD's propagation at block boundaries — without it the
+embedding gather can anchor activations on the wrong mesh axis and
+replicate the batch (observed: 529 GiB/device temp on gemma-2b train).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import DEFAULT_RULES, resolve_spec
+
+# Activation logical axes resolve through the same rule table; "act_seq"
+# is unsharded by default (sequence parallelism is a perf-variant rule).
+ACT_RULES_EXTRA = {"act_seq": ()}
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Optional[dict] = None):
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    rules.update({k: v for k, v in ACT_RULES_EXTRA.items() if k not in rules})
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_context():
+    return _CTX.get()
+
+
+def shard(x: jax.Array, axes: tuple) -> jax.Array:
+    """Constrain ``x`` to its logical axes if a context is active."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(tuple(x.shape), axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

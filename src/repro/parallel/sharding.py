@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules -> NamedSharding resolution.
+
+MaxText-style logical axis names are attached to every parameter/cache
+leaf (see models.layers); this module resolves them against a physical
+mesh with *divisibility fallback*: a logical axis whose dim does not
+divide the mapped mesh axes is replicated instead of erroring, so one
+rule set covers all 10 architectures (MQA kv=1, 60-expert MoE, batch-1
+long-context, ...).
+
+Rule resolution is positional and greedy: mesh axes are consumed left to
+right, each tensor uses a mesh axis at most once, and context parallelism
+falls out naturally — ``kv_seq -> data`` only binds when ``batch`` could
+not use the data axis (e.g. the batch-1 long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh axes (in binding-priority order)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),        # ZeRO-3 parameter/optimizer sharding
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),           # expert parallelism
+    # context parallelism: binds whatever the structural dims left free —
+    # "data" for the batch-1 long_500k cell, "model" for small-KV-head
+    # archs whose heads cannot cover the model axis
+    "kv_seq": ("data", "model"),
+    "layers": (),                   # scan axis: replicated
+}
+
+# Rules for the beyond-paper perf variant: experts spread over both axes.
+EP_WIDE_RULES = dict(DEFAULT_RULES, expert=("model", "data"))
+
+
+def resolve_spec(shape: tuple[int, ...], axes: Optional[tuple],
+                 mesh: Mesh, rules: Optional[dict] = None) -> P:
+    """Resolve one leaf's logical axes to a PartitionSpec."""
+    rules = rules or DEFAULT_RULES
+    if axes is None or len(shape) == 0:
+        return P()
+    # scalar/mismatched annotation -> replicate
+    if len(axes) != len(shape):
+        return P()
+    used: set[str] = set()
+    parts: list = [None] * len(shape)
+
+    def bind(i: int, dim: int, logical: str) -> None:
+        chosen: list[str] = []
+        prod = 1
+        for cand in rules.get(logical, ()):
+            if cand in used or cand not in mesh.shape:
+                continue
+            size = mesh.shape[cand]
+            if dim % (prod * size) == 0:
+                chosen.append(cand)
+                used.add(cand)
+                prod *= size
+        parts[i] = (tuple(chosen) if len(chosen) > 1
+                    else (chosen[0] if chosen else None))
+
+    # two passes: kv_seq (context parallelism) binds only to mesh axes the
+    # structural dims (batch/heads/...) could not use.
+    for i, (dim, logical) in enumerate(zip(shape, axes)):
+        if logical is not None and logical != "kv_seq":
+            bind(i, dim, logical)
+    for i, (dim, logical) in enumerate(zip(shape, axes)):
+        if logical == "kv_seq":
+            bind(i, dim, logical)
+    return P(*parts)
+
+
+def make_shardings(mesh: Mesh, shapes: Any, axes: Any,
+                   rules: Optional[dict] = None) -> Any:
+    """Tree of NamedShardings matching a (ShapeDtypeStruct, logical-axes)
+    tree pair."""
+    def leaf(shape_leaf, axes_leaf):
+        spec = resolve_spec(tuple(shape_leaf.shape), axes_leaf, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    # axes tree may have tuple leaves: treat tuples/None as leaves
+    return jax.tree.map(
+        leaf, shapes, axes,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, jax.Array,
+                                         np.ndarray)))
+
+
+def batch_sharding(mesh: Mesh, rules: Optional[dict] = None) -> NamedSharding:
+    """Sharding for [batch, ...] host data (first dim over pod+data)."""
+    rules = rules or DEFAULT_RULES
+    axes = [a for a in rules["batch"] if a in mesh.shape]
+    spec = P(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return NamedSharding(mesh, spec)
+
+
+def input_shardings(mesh: Mesh, specs: dict,
+                    rules: Optional[dict] = None) -> dict:
+    """Shard every batch input on its leading (batch) dim when divisible."""
+    rules = rules or DEFAULT_RULES
+
+    def leaf(s):
+        n = int(np.prod([mesh.shape[a] for a in rules["batch"]
+                         if a in mesh.shape]))
+        if s.shape and s.shape[0] % n == 0:
+            return batch_sharding(mesh, rules)
+        # fall back: replicate (e.g. batch-1 long-context cell)
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

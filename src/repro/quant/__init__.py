@@ -1,0 +1,5 @@
+from .linear import (dequantize_tree, quantize_mlp, quantized_mlp_apply,
+                     QuantizedLinear)
+
+__all__ = ["QuantizedLinear", "quantize_mlp", "quantized_mlp_apply",
+           "dequantize_tree"]

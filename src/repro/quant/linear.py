@@ -1,0 +1,83 @@
+"""INT8 weight quantization for serving — the paper's INT8 CIM mode,
+end to end on the Pallas `cim_gemm` kernel.
+
+The paper evaluates all workloads at INT8 ("using INT8 data precision",
+§IV-B): weights live in the CIM arrays as int8, activations are
+quantized by the pre-processing unit, and the post-processing unit
+rescales.  This module is the software mirror: per-output-channel int8
+weights + dynamic per-row activation quantization + f32 rescale, with
+the matmul dispatched to ``kernels.ops.cim_quantized_matmul`` (the
+weight-stationary Pallas kernel) on TPU, or its jnp oracle elsewhere.
+
+Used by the serving path for MLP blocks (the dominant decode weight
+traffic); validated against the bf16 reference in tests/test_quant.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+class QuantizedLinear(NamedTuple):
+    """Per-output-channel symmetric int8 weight."""
+
+    q: jax.Array        # int8 [in, out]
+    scale: jax.Array    # f32 [out]
+
+
+def quantize_linear(w: jax.Array) -> QuantizedLinear:
+    q, s = kops.quantize_weights_int8(w.astype(jnp.float32))
+    return QuantizedLinear(q, s)
+
+
+def quantized_matmul(x: jax.Array, w: QuantizedLinear,
+                     use_kernel: bool = False) -> jax.Array:
+    """x [..., K] @ int8 W -> f32 [..., N].
+
+    use_kernel=True dispatches the Pallas cim_gemm (interpret mode on
+    CPU — exact same integer math, slower); False uses the jnp oracle
+    (identical numerics, fast on CPU).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_kernel:
+        out = kops.cim_quantized_matmul(x2, w.q, w.scale)
+    else:
+        out = kref.quantized_matmul_ref(x2, w.q, w.scale)
+    return out.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# MLP-block quantization (the dominant decode weight traffic)
+# ---------------------------------------------------------------------------
+def quantize_mlp(mlp_params: dict) -> dict:
+    """{'up','down'[,'gate']} bf16 -> QuantizedLinear tree."""
+    out = {k: quantize_linear(v) for k, v in mlp_params.items()
+           if k in ("up", "down", "gate")}
+    return out
+
+
+def quantized_mlp_apply(qparams: dict, x: jax.Array, activation: str,
+                        use_kernel: bool = False) -> jax.Array:
+    up = quantized_matmul(x, qparams["up"], use_kernel)
+    if "gate" in qparams:
+        g = quantized_matmul(x, qparams["gate"], use_kernel)
+        act = jax.nn.gelu(g, approximate=True) \
+            if activation in ("gelu", "geglu") else jax.nn.silu(g)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up, approximate=True) \
+            if activation in ("gelu", "geglu") else jax.nn.silu(up)
+    out = quantized_matmul(h.astype(jnp.float32), qparams["down"], use_kernel)
+    return out.astype(x.dtype)
+
+
+def dequantize_tree(qtree: dict) -> dict:
+    """QuantizedLinear tree -> f32 weights (for parity checks)."""
+    return {k: (v.q.astype(jnp.float32) * v.scale[None, :])
+            for k, v in qtree.items()}

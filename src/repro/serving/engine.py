@@ -1,0 +1,188 @@
+"""Serving engine: continuous batching over fixed-shape decode slots.
+
+The paper is an inference paper — this is the end-to-end driver layer
+that its CIM-TPU would sit under.  Architecture (vLLM-style, adapted to
+JAX's static shapes):
+
+  * ``n_slots`` concurrent sequences share one batched KV cache (the
+    model's ring-buffer caches, leading batch dim = n_slots).
+  * Requests queue up; free slots are *prefilled one request at a time*
+    (slot-masked cache write) and then join the batched decode step.
+  * Every decode step advances all active slots by one token; finished
+    sequences (EOS or max_tokens) free their slot immediately — classic
+    continuous batching, no head-of-line blocking on long generations.
+  * Sampling: greedy / temperature / top-k, seeded per request.
+
+All step functions are jitted once (static shapes: n_slots x 1 decode,
+1 x prefill_len prefill buckets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [prompt_len] int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 = greedy
+    top_k: int = 0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+    # filled by the engine
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    batch_occupancy: list = field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, model, params, n_slots: int = 4,
+                 max_len: int = 512, prefill_bucket: int = 64):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.bucket = prefill_bucket
+        self.cache = model.init_cache(n_slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.slot_last = np.zeros(n_slots, np.int32)
+        self.queue: deque[Request] = deque()
+        self.stats = EngineStats()
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        model = self.model
+
+        @jax.jit
+        def prefill_one(params, cache, tokens, slot):
+            """Prefill one request into slot ``slot`` of the batched cache.
+
+            Cache leaves are stacked [layers, batch, ...]; a fresh
+            single-slot view is prefetched, reset (zeros, empty position
+            sentinel, index 0), prefilled with batch=1, and written back.
+            """
+            def take(a):
+                return jax.lax.dynamic_slice_in_dim(a, slot, 1, 1)
+
+            sub = jax.tree.map(take, cache)
+            sub = jax.tree.map(jnp.zeros_like, sub)
+            sub = _set_pos_empty(sub)
+            logits, sub = model.prefill_last(
+                params, {"inputs": tokens[None]}, sub)
+
+            def put(full, s):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, s.astype(full.dtype), slot, 1)
+
+            cache = jax.tree.map(put, cache, sub)
+            return logits[0, -1], cache
+
+        @jax.jit
+        def decode_all(params, cache, last_tokens):
+            logits, cache = model.decode_step(
+                params, {"inputs": last_tokens[:, None]}, cache)
+            return logits[:, 0], cache
+
+        self._prefill_one = prefill_one
+        self._decode_all = decode_all
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _sample(self, req: Request, logits: np.ndarray, step: int) -> int:
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits))
+        rng = np.random.default_rng((req.seed, req.uid, step))
+        x = logits.astype(np.float64) / req.temperature
+        if req.top_k:
+            kth = np.partition(x, -req.top_k)[-req.top_k]
+            x = np.where(x < kth, -np.inf, x)
+        p = np.exp(x - x.max())
+        p /= p.sum()
+        return int(rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """Fill free slots from the queue (prefill path)."""
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            L = len(req.prompt)
+            pad = (-L) % self.bucket
+            # pad to the bucket by repeating the final token: keeps the
+            # prefill shape static (one jit trace per bucket count), at
+            # the cost of a few extra context tokens.
+            toks = np.concatenate(
+                [req.prompt, np.full(pad, req.prompt[-1])]).astype(np.int32)
+            logits, self.cache = self._prefill_one(
+                self.params, self.cache, jnp.asarray(toks), slot)
+            self.stats.prefills += 1
+            nxt = self._sample(req, np.asarray(logits), 0)
+            req.generated.append(nxt)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = L + pad
+            self.slot_last[slot] = nxt
+
+    def _active(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def step(self) -> None:
+        """One engine iteration: admit + one batched decode step."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return
+        self.stats.batch_occupancy.append(len(active) / self.n_slots)
+        last = jnp.asarray(self.slot_last)
+        logits, self.cache = self._decode_all(self.params, self.cache, last)
+        logits = np.asarray(logits)
+        self.stats.decode_steps += 1
+        for slot in active:
+            req = self.slot_req[slot]
+            tok = self._sample(req, logits[slot], len(req.generated))
+            req.generated.append(tok)
+            self.stats.tokens_out += 1
+            self.slot_last[slot] = tok
+            self.slot_pos[slot] += 1
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.generated) >= req.max_new_tokens
+                    or self.slot_pos[slot] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[slot] = None   # slot freed immediately
+
+    def run_until_done(self, max_iters: int = 10_000) -> None:
+        it = 0
+        while (self.queue or self._active()) and it < max_iters:
+            self.step()
+            it += 1
+
+
+def _set_pos_empty(cache):
+    """Reset ring-buffer position arrays to the empty sentinel."""
+    def fix(path, a):
+        name = str(path[-1]) if path else ""
+        if "pos" in name and hasattr(a, "dtype") and a.dtype == jnp.int32 \
+                and a.ndim >= 2:
+            return jnp.full_like(a, 2 ** 30)
+        return a
+    return jax.tree_util.tree_map_with_path(fix, cache)

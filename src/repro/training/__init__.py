@@ -1,0 +1,5 @@
+from .trainer import StragglerPolicy, Trainer, TrainerConfig, \
+    simple_train_step
+
+__all__ = ["StragglerPolicy", "Trainer", "TrainerConfig",
+           "simple_train_step"]

@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED config
+of the same family and run one forward + one train step on CPU, asserting
+output shapes and the absence of NaNs.  The FULL configs are exercised
+only via the dry-run (ShapeDtypeStruct, no allocation) — see
+tests/test_distribution.py and launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+from repro.configs import ARCH_IDS, ASSIGNED_SHAPES, get_config, \
+    reduced_config, cell_applicable
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+K1, K2 = jax.random.split(KEY)
+
+
+def make_batch(cfg, B=2, S=16, with_targets=True):
+    if cfg.frontend == "audio":
+        b = {"frame_embeddings": jax.random.normal(
+            K1, (B, S, cfg.d_model), jnp.bfloat16)}
+        if with_targets:
+            b["targets"] = jax.random.randint(K2, (B, S), 0, cfg.vocab)
+        return b
+    if cfg.frontend == "vision":
+        st = S - cfg.frontend_len
+        b = {"patch_embeddings": jax.random.normal(
+                K1, (B, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16),
+             "inputs": jax.random.randint(K1, (B, st), 0, cfg.vocab)}
+        if with_targets:
+            b["targets"] = jax.random.randint(K2, (B, st), 0, cfg.vocab)
+        return b
+    b = {"inputs": jax.random.randint(K1, (B, S), 0, cfg.vocab)}
+    if with_targets:
+        b["targets"] = jax.random.randint(K2, (B, S), 0, cfg.vocab)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = reduced_config(get_config(arch))
+        m = build_model(cfg)
+        params = m.init(KEY)
+        batch = make_batch(cfg, with_targets=False)
+        logits, _, aux = m.forward(params, batch)
+        B = 2
+        S_text = batch["inputs"].shape[1] if "inputs" in batch else 16
+        exp_seq = (cfg.frontend_len + S_text) if cfg.frontend == "vision" \
+            else 16
+        assert logits.shape == (B, exp_seq, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    def test_train_step(self, arch):
+        cfg = reduced_config(get_config(arch))
+        m = build_model(cfg)
+        params = m.init(KEY)
+        batch = make_batch(cfg)
+        ocfg = optim.AdamWConfig(learning_rate=1e-3)
+        opt_state = optim.init(ocfg, params)
+        apply_update = optim.update(ocfg)
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                m.loss, has_aux=True)(params, batch)
+            params, opt_state, om = apply_update(grads, opt_state, params)
+            return params, opt_state, loss, om["grad_norm"]
+
+        params2, opt2, loss, gnorm = train_step(params, opt_state, batch)
+        assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+        assert bool(jnp.isfinite(gnorm)), f"{arch}: grad norm not finite"
+        assert float(gnorm) > 0.0
+        # params actually changed (note: the token-embedding table is
+        # legitimately untouched for audio-frontend archs)
+        changed = any(
+            not jnp.array_equal(a, b)
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+        assert changed, f"{arch}: no parameter changed after a train step"
+
+    def test_prefill_decode(self, arch):
+        cfg = reduced_config(get_config(arch))
+        m = build_model(cfg)
+        params = m.init(KEY)
+        batch = make_batch(cfg, with_targets=False)
+        cache = m.init_cache(2, 32)
+        logits, cache = m.prefill(params, batch, cache)
+        if cfg.frontend == "audio":
+            step = {"frame_embeddings": jax.random.normal(
+                K1, (2, 1, cfg.d_model), jnp.bfloat16)}
+        else:
+            step = {"inputs": jnp.ones((2, 1), jnp.int32)}
+        lg, cache = m.decode_step(params, step, cache)
+        assert lg.shape == (2, 1, cfg.vocab)
+        assert not bool(jnp.isnan(lg).any()), f"{arch}: NaN in decode logits"
+
+
+def test_all_archs_have_four_cells():
+    rows = 0
+    skips = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in ASSIGNED_SHAPES:
+            ok, reason = cell_applicable(cfg, shape)
+            rows += 1
+            if not ok:
+                skips += 1
+                assert shape == "long_500k"
+                assert reason
+    assert rows == 40
+    # exactly the 6 pure-full-attention archs skip long_500k
+    assert skips == 6
+
+
+def test_param_counts_in_expected_range():
+    """Config sanity: derived parameter counts near the nominal sizes."""
+    expect = {
+        "command-r-plus-104b": (85e9, 120e9),
+        "gemma-2b": (2.0e9, 3.3e9),
+        "deepseek-67b": (60e9, 72e9),
+        "deepseek-v3-671b": (600e9, 720e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),   # 14.3B total / 2.7B active
+        "musicgen-medium": (1.2e9, 2.2e9),
+        "paligemma-3b": (2.0e9, 3.5e9),    # backbone (frontend stubbed)
+        "gemma3-4b": (3.0e9, 5.0e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        # our mLSTM uses dense q/k/v projections (the official 350M uses
+        # per-head block-diagonal ones) -> ~0.52B vs the nominal 0.35B
+        "xlstm-350m": (0.25e9, 0.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen2-moe-a2.7b")
+    active = cfg.active_param_count()
+    assert 2.0e9 <= active <= 3.5e9  # "A2.7B"

@@ -1,0 +1,283 @@
+"""Tests for the CIM-TPU architecture simulator (repro.core).
+
+Validates the paper's headline claims (Table II, Fig 6, Fig 7, Fig 8)
+against the simulator, plus structural invariants of the timing/energy
+models and the mapping engine.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DEFAULT_ENERGY_MODEL as EM,
+    MatMulOp, OpKind, VectorOp,
+    cim_tpu, design_a, design_b, exploration_configs, get_hardware,
+    tpuv4i_baseline,
+    matmul_cost, simulate_graph, simulate_op,
+    llm_prefill_cost, llm_decode_cost, dit_inference_cost,
+    run_exploration, pick_designs,
+    pipeline_parallel_llm_cost, tensor_parallel_llm_cost,
+    mxu_area_mm2,
+)
+from repro.core.workloads import gpt3_30b, dit_xl2, llm_decode_graph
+
+
+BASE = tpuv4i_baseline()
+CIM = get_hardware("cim-16x8")
+
+
+# ---------------------------------------------------------------------------
+# Table II — MXU micro-comparison
+# ---------------------------------------------------------------------------
+class TestTableII:
+    def test_peak_macs_parity(self):
+        # 16384 MACs/cycle for both the 128x128 digital MXU and 16x8 CIM-MXU
+        assert BASE.mxu.macs_per_cycle == 16384
+        assert CIM.mxu.macs_per_cycle == 16384
+
+    def test_energy_efficiency_ratio(self):
+        dig = EM.peak_tops_per_watt(BASE)
+        cim = EM.peak_tops_per_watt(CIM)
+        assert dig == pytest.approx(0.77, rel=0.02)
+        assert cim == pytest.approx(7.26, rel=0.02)
+        assert cim / dig == pytest.approx(9.43, rel=0.02)
+
+    def test_area_efficiency_ratio(self):
+        ratio = mxu_area_mm2(BASE) / mxu_area_mm2(CIM)
+        assert ratio == pytest.approx(2.02, rel=0.02)
+
+
+# ---------------------------------------------------------------------------
+# MXU timing model invariants
+# ---------------------------------------------------------------------------
+class TestMXUTiming:
+    def test_systolic_large_gemm_near_peak(self):
+        op = MatMulOp(name="g", kind=OpKind.FFN, M=8192, K=4096, N=4096)
+        cost = matmul_cost(BASE, op)
+        assert cost.util > 0.9
+
+    def test_cim_large_gemm_near_peak(self):
+        op = MatMulOp(name="g", kind=OpKind.FFN, M=8192, K=4096, N=4096)
+        cost = matmul_cost(CIM, op)
+        assert cost.util > 0.9
+
+    def test_cim_and_systolic_parity_on_large_gemm(self):
+        # Paper §IV-B: prefill GEMMs see no CIM latency win.
+        op = MatMulOp(name="g", kind=OpKind.FFN, M=8192, K=7168, N=7168)
+        dig = matmul_cost(BASE, op)
+        cim = matmul_cost(CIM, op)
+        assert cim.cycles == pytest.approx(dig.cycles, rel=0.15)
+
+    def test_cim_wins_batched_gemv(self):
+        # Paper §IV-B: decode attention GEMVs (unshared weights).
+        op = MatMulOp(name="qk", kind=OpKind.ATTN_QK, M=1, K=128, N=1280,
+                      batch=448, weights_shared=False)
+        dig = matmul_cost(BASE, op)
+        cim = matmul_cost(CIM, op)
+        assert cim.cycles < 0.2 * dig.cycles
+
+    def test_unshared_weights_cost_more_than_shared(self):
+        shared = MatMulOp(name="s", kind=OpKind.FFN, M=64, K=1024, N=1024,
+                          batch=8, weights_shared=True)
+        unshared = shared.scaled(weights_shared=False)
+        assert matmul_cost(BASE, unshared).cycles > matmul_cost(BASE, shared).cycles
+
+    @given(
+        m=st.integers(1, 4096), k=st.integers(1, 8192), n=st.integers(1, 8192),
+        b=st.integers(1, 64), shared=st.booleans(),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_cost_invariants(self, m, k, n, b, shared):
+        op = MatMulOp(name="p", kind=OpKind.FFN, M=m, K=k, N=n, batch=b,
+                      weights_shared=shared)
+        for hw in (BASE, CIM):
+            c = matmul_cost(hw, op)
+            assert c.cycles > 0
+            assert 0 <= c.util <= 1.0
+            assert c.active_macs == op.macs
+            # cannot beat the ensemble peak
+            assert c.cycles * hw.total_mac_units >= 0.999 * op.macs
+
+    @given(m=st.integers(1, 512), k=st.integers(64, 2048), n=st.integers(64, 2048))
+    @settings(max_examples=30, deadline=None)
+    def test_cim_monotone_in_cores(self, m, k, n):
+        op = MatMulOp(name="p", kind=OpKind.FFN, M=m, K=k, N=n)
+        small = matmul_cost(cim_tpu(8, 8, 2), op)
+        large = matmul_cost(cim_tpu(16, 16, 8), op)
+        # modulo the longer systolic fill of the bigger grid
+        assert large.cycles <= small.cycles * 1.01 + 64
+
+
+# ---------------------------------------------------------------------------
+# Fig 6 — model inference evaluations (GPT-3-30B / DiT-XL/2, batch 8, INT8)
+# ---------------------------------------------------------------------------
+class TestFig6:
+    def test_prefill_gemm_dominated(self):
+        pb = llm_prefill_cost(BASE)
+        frac = pb.breakdown_fractions()
+        assert frac["gemm"] > 0.8  # paper: 84.9%
+
+    def test_prefill_latency_parity_cim(self):
+        pb, pc = llm_prefill_cost(BASE), llm_prefill_cost(CIM)
+        assert pc.latency_s == pytest.approx(pb.latency_s, rel=0.05)
+
+    def test_prefill_energy_reduction(self):
+        pb, pc = llm_prefill_cost(BASE), llm_prefill_cost(CIM)
+        ratio = pb.mxu_energy_j / pc.mxu_energy_j
+        assert 8.0 < ratio < 11.0  # paper: 9.21x
+
+    def test_decode_attention_share(self):
+        db = llm_decode_cost(BASE)
+        share = db.attention_latency_s() / db.latency_s
+        assert 0.28 < share < 0.50  # paper: 33.7%
+
+    def test_decode_gemv_speedup(self):
+        db, dc = llm_decode_cost(BASE), llm_decode_cost(CIM)
+        red = 1 - dc.attention_latency_s() / db.attention_latency_s()
+        assert 0.5 < red < 0.85  # paper: 72.7%
+
+    def test_decode_latency_reduction(self):
+        db, dc = llm_decode_cost(BASE), llm_decode_cost(CIM)
+        red = 1 - dc.latency_s / db.latency_s
+        assert 0.2 < red < 0.45  # paper: 29.9%
+
+    def test_decode_energy_reduction(self):
+        db, dc = llm_decode_cost(BASE), llm_decode_cost(CIM)
+        ratio = db.mxu_energy_j / dc.mxu_energy_j
+        assert 10.0 < ratio < 18.0  # paper: 13.4x
+
+    def test_dit_softmax_bottleneck(self):
+        tb = dit_inference_cost(BASE)
+        assert 0.30 < tb.breakdown["softmax"] < 0.42  # paper: 36.9%
+        assert 0.30 < tb.breakdown["gemm"] < 0.45     # paper: 35.65%
+
+    def test_dit_cim_latency_and_energy(self):
+        tb, tc = dit_inference_cost(BASE), dit_inference_cost(CIM)
+        red = 1 - tc.latency_s / tb.latency_s
+        assert 0.0 < red < 0.15  # paper: 6.67%
+        ratio = tb.mxu_energy_j / tc.mxu_energy_j
+        assert 8.0 < ratio < 13.0  # paper: 10.4x
+
+
+# ---------------------------------------------------------------------------
+# Fig 7 — architecture exploration
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def exploration():
+    return run_exploration(quadrature=2)
+
+
+class TestFig7:
+    def test_grid_size(self, exploration):
+        assert len(exploration) == 1 + 9  # baseline + 3 dims x 3 counts
+
+    def test_llm_diminishing_returns_16x16(self, exploration):
+        rows = {r.hw.name: r for r in exploration}
+        big = rows["cim-tpu-8x16x16"]
+        mid = rows["cim-tpu-8x16x8"]
+        gain = mid.llm.latency_s / big.llm.latency_s - 1
+        assert gain < 0.10  # paper: only 2.5% improvement
+        energy_up = big.llm.mxu_energy_j / mid.llm.mxu_energy_j - 1
+        assert energy_up > 0.3  # paper: 95% energy increase
+
+    def test_small_config_energy_savings(self, exploration):
+        base = exploration[0]
+        rows = {r.hw.name: r for r in exploration}
+        small = rows["cim-tpu-2x8x8"]
+        saving = base.llm.mxu_energy_j / small.llm.mxu_energy_j
+        assert saving > 15.0  # paper: 27.3x
+
+    def test_dit_scales_with_peak(self, exploration):
+        rows = {r.hw.name: r for r in exploration}
+        assert rows["cim-tpu-8x16x16"].dit.latency_s < \
+            rows["cim-tpu-4x16x8"].dit.latency_s
+        # paper: 8x(16x16) gives 33.8% reduction; ours in range
+        base = exploration[0]
+        red = 1 - rows["cim-tpu-8x16x16"].dit.latency_s / base.dit.latency_s
+        assert 0.2 < red < 0.45
+
+    def test_design_b_matches_paper(self, exploration):
+        d = pick_designs(exploration)
+        assert d["design_b"].hw.name == "cim-tpu-8x16x8"  # paper's Design B
+
+    def test_design_a_neighborhood(self, exploration):
+        # Paper picks 4x(8x8); our mapping engine finds decode more firmly
+        # HBM-bound, allowing an equal-or-larger 8x8-core config.
+        d = pick_designs(exploration)
+        assert "8x8" in d["design_a"].hw.name
+
+
+# ---------------------------------------------------------------------------
+# Fig 8 — multi-device inference
+# ---------------------------------------------------------------------------
+class TestFig8:
+    def test_pp_throughput_scales(self):
+        model = gpt3_30b()
+        t = [pipeline_parallel_llm_cost(BASE, model, n, quadrature=2).throughput_per_s
+             for n in (1, 2, 4)]
+        assert t[1] > 1.5 * t[0]
+        assert t[2] > 1.5 * t[1]
+
+    def test_design_a_beats_baseline_throughput(self):
+        model = gpt3_30b()
+        for n in (1, 2, 4):
+            b = pipeline_parallel_llm_cost(BASE, model, n, quadrature=2)
+            a = pipeline_parallel_llm_cost(design_a(), model, n, quadrature=2)
+            assert a.throughput_per_s > 1.1 * b.throughput_per_s  # paper: avg 28%
+            assert b.mxu_energy_j / a.mxu_energy_j > 10  # paper: 24.2x
+
+    def test_design_b_beats_baseline_throughput(self):
+        model = gpt3_30b()
+        b4 = pipeline_parallel_llm_cost(BASE, model, 4, quadrature=2)
+        d4 = pipeline_parallel_llm_cost(design_b(), model, 4, quadrature=2)
+        assert d4.throughput_per_s > 1.2 * b4.throughput_per_s  # paper: 33%
+        assert b4.mxu_energy_j / d4.mxu_energy_j > 4  # paper: 6.34x
+
+    def test_tp_reduces_latency(self):
+        model = gpt3_30b()
+        t1 = tensor_parallel_llm_cost(BASE, model, 1, quadrature=2)
+        t4 = tensor_parallel_llm_cost(BASE, model, 4, quadrature=2)
+        assert t4.latency_s < t1.latency_s
+
+
+# ---------------------------------------------------------------------------
+# Simulator structural invariants
+# ---------------------------------------------------------------------------
+class TestSimulatorInvariants:
+    def test_latency_at_least_roofline(self):
+        op = MatMulOp(name="g", kind=OpKind.FFN, M=256, K=4096, N=4096)
+        c = simulate_op(BASE, op)
+        hbm_floor = op.total_bytes / BASE.hbm_bandwidth
+        compute_floor = op.macs / BASE.peak_macs_per_second
+        assert c.latency_s >= 0.99 * max(hbm_floor * 0.5, compute_floor)
+
+    def test_vector_op_cost(self):
+        op = VectorOp(name="sm", kind=OpKind.SOFTMAX, elems=10_000_000)
+        c = simulate_op(BASE, op)
+        assert c.latency_s > 0
+        assert c.vpu_energy_j > 0
+        assert c.mxu_energy_j == 0
+
+    def test_graph_aggregation(self):
+        g = llm_decode_graph(gpt3_30b(), 8, 1280)
+        cost = simulate_graph(BASE, g)
+        assert cost.latency_s == pytest.approx(
+            g.repeat * sum(c.latency_s for c in cost.op_costs))
+        assert cost.total_energy_j > cost.mxu_energy_j
+
+    def test_energy_positive_and_decomposed(self):
+        g = llm_decode_graph(gpt3_30b(), 8, 1280)
+        cost = simulate_graph(CIM, g)
+        assert cost.mxu_energy_j > 0
+        assert cost.memory_energy_j > 0
+        assert cost.total_energy_j == pytest.approx(
+            cost.mxu_energy_j + cost.vpu_energy_j + cost.memory_energy_j)
+
+    @given(elems=st.integers(1, 10**9))
+    @settings(max_examples=20, deadline=None)
+    def test_vector_scaling(self, elems):
+        op = VectorOp(name="v", kind=OpKind.ELEMENTWISE, elems=elems)
+        c = simulate_op(BASE, op)
+        assert c.latency_s >= 0
+        assert c.compute_s <= c.latency_s + 1e-12

@@ -1,0 +1,231 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs ref.py oracles,
+swept over shapes/dtypes + hypothesis property tests (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.cim_gemm import cim_gemm_int8
+
+KEY = jax.random.PRNGKey(0)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+# ---------------------------------------------------------------------------
+# cim_gemm
+# ---------------------------------------------------------------------------
+class TestCimGemm:
+    @pytest.mark.parametrize("m,k,n", [(256, 128, 256), (512, 512, 512),
+                                       (256, 1024, 512), (1024, 256, 1024)])
+    def test_int8_exact(self, m, k, n):
+        k1, k2 = keys(2)
+        x = jax.random.randint(k1, (m, k), -127, 128, jnp.int8)
+        w = jax.random.randint(k2, (k, n), -127, 128, jnp.int8)
+        out = cim_gemm_int8(x, w, interpret=True)
+        expect = ref.cim_gemm_int8_ref(x, w)
+        assert (np.asarray(out) == np.asarray(expect)).all()
+
+    @pytest.mark.parametrize("bm,bn,bk", [(256, 256, 128), (256, 512, 512)])
+    def test_block_shape_invariance(self, bm, bn, bk):
+        k1, k2 = keys(2)
+        x = jax.random.randint(k1, (512, 512), -127, 128, jnp.int8)
+        w = jax.random.randint(k2, (512, 512), -127, 128, jnp.int8)
+        out = cim_gemm_int8(x, w, block_m=bm, block_n=bn, block_k=bk,
+                            interpret=True)
+        assert (np.asarray(out) ==
+                np.asarray(ref.cim_gemm_int8_ref(x, w))).all()
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_quantized_matmul_close_to_float(self, dtype):
+        k1, k2 = keys(2)
+        x = jax.random.normal(k1, (64, 256), dtype)
+        w = jax.random.normal(k2, (256, 384), jnp.float32) * 0.1
+        w_q, w_s = ops.quantize_weights_int8(w)
+        out = ops.cim_quantized_matmul(x, w_q, w_s, interpret=True)
+        expect = x.astype(jnp.float32) @ w
+        rel = np.abs(np.asarray(out) - np.asarray(expect)) / \
+            (np.abs(np.asarray(expect)) + 1e-2)
+        assert np.median(rel) < 0.05  # int8 quantization error budget
+
+    def test_quantized_matches_ref_path(self):
+        k1, k2 = keys(2)
+        x = jax.random.normal(k1, (32, 128), jnp.float32)
+        w = jax.random.normal(k2, (128, 256), jnp.float32)
+        w_q, w_s = ops.quantize_weights_int8(w)
+        out = ops.cim_quantized_matmul(x, w_q, w_s, interpret=True)
+        expect = ref.quantized_matmul_ref(x, w_q, w_s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(m=st.sampled_from([256, 512]), k=st.sampled_from([128, 256, 384]),
+           n=st.sampled_from([256, 512, 768]))
+    @settings(max_examples=8, deadline=None)
+    def test_property_shapes(self, m, k, n):
+        k1, k2 = keys(2)
+        x = jax.random.randint(k1, (m, k), -127, 128, jnp.int8)
+        w = jax.random.randint(k2, (k, n), -127, 128, jnp.int8)
+        out = cim_gemm_int8(x, w, interpret=True)
+        assert (np.asarray(out) ==
+                np.asarray(ref.cim_gemm_int8_ref(x, w))).all()
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                               (True, 48)])
+    @pytest.mark.parametrize("kh", [1, 2, 4])
+    def test_vs_ref(self, causal, window, kh):
+        B, S, H, D = 2, 256, 4, 32
+        k1, k2, k3 = keys(3)
+        q = jax.random.normal(k1, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(k2, (B, S, kh, D), jnp.float32)
+        v = jax.random.normal(k3, (B, S, kh, D), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  block_q=64, block_k=64, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, causal, window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                           (jnp.bfloat16, 2e-2)])
+    def test_dtypes(self, dtype, tol):
+        B, S, H, D = 1, 128, 2, 64
+        k1, k2, k3 = keys(3)
+        q = jax.random.normal(k1, (B, S, H, D), dtype)
+        k = jax.random.normal(k2, (B, S, H, D), dtype)
+        v = jax.random.normal(k3, (B, S, H, D), dtype)
+        out = ops.flash_attention(q, k, v, block_q=64, block_k=64,
+                                  interpret=True)
+        expect = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @given(bq=st.sampled_from([32, 64, 128]), bk=st.sampled_from([32, 64]))
+    @settings(max_examples=6, deadline=None)
+    def test_block_invariance(self, bq, bk):
+        B, S, H, D = 1, 128, 2, 16
+        k1, k2, k3 = keys(3)
+        q = jax.random.normal(k1, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(k2, (B, S, H, D), jnp.float32)
+        v = jax.random.normal(k3, (B, S, H, D), jnp.float32)
+        out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                                  interpret=True)
+        expect = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+class TestDecodeAttention:
+    @pytest.mark.parametrize("window", [None, 64])
+    @pytest.mark.parametrize("kh,g", [(1, 8), (4, 2), (8, 1)])
+    def test_vs_ref(self, window, kh, g):
+        B, S, D = 2, 256, 32
+        k1, k2, k3 = keys(3)
+        q = jax.random.normal(k1, (B, kh, g, D), jnp.float32)
+        k = jax.random.normal(k2, (B, S, kh, D), jnp.float32)
+        v = jax.random.normal(k3, (B, S, kh, D), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+        q_pos = jnp.array([S - 1, S // 2], jnp.int32)
+        out = ops.decode_attention(q, k, v, pos, q_pos, window=window,
+                                   block_k=64, interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos, window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_ring_buffer_positions(self):
+        """Slots hold out-of-order positions (ring semantics)."""
+        B, S, KH, G, D = 1, 128, 2, 2, 16
+        k1, k2, k3, k4 = keys(4)
+        q = jax.random.normal(k1, (B, KH, G, D), jnp.float32)
+        k = jax.random.normal(k2, (B, S, KH, D), jnp.float32)
+        v = jax.random.normal(k3, (B, S, KH, D), jnp.float32)
+        pos = jax.random.permutation(k4, jnp.arange(2 * S)[:S])[None, :]
+        pos = pos.astype(jnp.int32)
+        q_pos = jnp.array([3 * S // 2], jnp.int32)
+        out = ops.decode_attention(q, k, v, pos, q_pos, window=S,
+                                   block_k=32, interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos, window=S)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+class TestSSDScan:
+    @pytest.mark.parametrize("chunk", [16, 32, 64])
+    def test_vs_naive(self, chunk):
+        BH, S, P, N = 4, 128, 16, 8
+        k1, k2, k3, k4 = keys(4)
+        x = jax.random.normal(k1, (BH, S, P), jnp.float32)
+        log_a = -jnp.abs(jax.random.normal(k2, (BH, S))) * 0.3
+        b = jax.random.normal(k3, (BH, S, N), jnp.float32)
+        c = jax.random.normal(k4, (BH, S, N), jnp.float32)
+        y, h = ops.ssd_scan(x, log_a, b, c, chunk=chunk, interpret=True)
+        y_ref, h_ref = ref.ssd_scan_ref(x, log_a, b, c)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_matches_model_oracle(self):
+        """Kernel agrees with models.ssm.ssd_chunked (the model path)."""
+        from repro.models.ssm import ssd_chunked
+        B, S, H, P, N = 2, 64, 2, 8, 4
+        k1, k2, k3, k4 = keys(4)
+        x = jax.random.normal(k1, (B, S, H, P), jnp.float32)
+        log_a = -jnp.abs(jax.random.normal(k2, (B, S, H))) * 0.3
+        b = jax.random.normal(k3, (B, S, 1, N), jnp.float32)
+        c = jax.random.normal(k4, (B, S, 1, N), jnp.float32)
+        y_m, h_m = ssd_chunked(x, log_a, b, c, 16)
+        xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+        laf = log_a.transpose(0, 2, 1).reshape(B * H, S)
+        bf = jnp.repeat(b, H, 2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+        cf = jnp.repeat(c, H, 2).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+        y_k, h_k = ops.ssd_scan(xf, laf, bf, cf, chunk=16, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y_k.reshape(B, H, S, P).transpose(0, 2, 1, 3)),
+            np.asarray(y_m), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(
+            np.asarray(h_k.reshape(B, H, P, N)), np.asarray(h_m),
+            rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# online_softmax
+# ---------------------------------------------------------------------------
+class TestOnlineSoftmax:
+    @pytest.mark.parametrize("r,c", [(256, 1024), (512, 512), (256, 4096)])
+    def test_vs_ref(self, r, c):
+        x = jax.random.normal(KEY, (r, c), jnp.float32) * 4
+        out = ops.online_softmax(x, block_r=128, block_c=1024,
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.online_softmax_ref(x)),
+                                   rtol=2e-5, atol=2e-6)
+
+    def test_extreme_values_stable(self):
+        x = jnp.array([[1e4, -1e4, 0.0, 1e4]] * 256, jnp.float32)
+        out = ops.online_softmax(x, interpret=True)
+        assert bool(jnp.isfinite(out).all())
+        np.testing.assert_allclose(np.asarray(jnp.sum(out, -1)),
+                                   np.ones(256), rtol=1e-5)
+
+    @given(scale=st.floats(0.1, 50.0))
+    @settings(max_examples=10, deadline=None)
+    def test_rows_sum_to_one(self, scale):
+        x = jax.random.normal(KEY, (128, 512), jnp.float32) * scale
+        out = ops.online_softmax(x, block_r=64, block_c=256, interpret=True)
+        np.testing.assert_allclose(np.asarray(jnp.sum(out, -1)),
+                                   np.ones(128), rtol=1e-4)

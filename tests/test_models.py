@@ -1,0 +1,300 @@
+"""Correctness tests for model components against naive references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (blockwise_attention, dense_attention,
+                                    attention_init, attention_apply,
+                                    init_kv_cache)
+from repro.models.ssm import SSMConfig, mamba2_apply, mamba2_init, ssd_chunked
+from repro.models.xlstm import (XLSTMConfig, mlstm_decode_step, mlstm_scan)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.layers import param_values
+
+KEY = jax.random.PRNGKey(42)
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (online-softmax) attention vs dense oracle
+# ---------------------------------------------------------------------------
+class TestBlockwiseAttention:
+    @pytest.mark.parametrize("kind,window", [("causal", None),
+                                             ("sliding", 7),
+                                             ("full", None)])
+    @pytest.mark.parametrize("kh", [1, 2, 4])
+    def test_matches_dense(self, kind, window, kh):
+        B, S, H, D = 2, 33, 4, 8
+        ks = jax.random.split(KEY, 3)
+        q = rand(ks[0], B, S, H, D)
+        k = rand(ks[1], B, S, kh, D)
+        v = rand(ks[2], B, S, kh, D)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        ref = dense_attention(q, k, v, pos, pos, kind, window)
+        out = blockwise_attention(q, k, v, pos, pos, kind, window,
+                                  q_block=8, kv_block=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_prefix_mask(self):
+        B, S, H, D = 1, 24, 2, 8
+        ks = jax.random.split(KEY, 3)
+        q, k, v = (rand(kk, B, S, H, D) for kk in ks)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        ref = dense_attention(q, k, v, pos, pos, "prefix", prefix_len=6)
+        out = blockwise_attention(q, k, v, pos, pos, "prefix", prefix_len=6,
+                                  q_block=8, kv_block=8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @given(s=st.integers(2, 48), qb=st.integers(2, 16), kb=st.integers(2, 16))
+    @settings(max_examples=12, deadline=None)
+    def test_block_size_invariance(self, s, qb, kb):
+        B, H, D = 1, 2, 4
+        ks = jax.random.split(jax.random.PRNGKey(s), 3)
+        q, k, v = (rand(kk, B, s, H, D) for kk in ks)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (B, s))
+        ref = dense_attention(q, k, v, pos, pos, "causal")
+        out = blockwise_attention(q, k, v, pos, pos, "causal",
+                                  q_block=qb, kv_block=kb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode == full forward
+# ---------------------------------------------------------------------------
+class TestKVCacheDecode:
+    @pytest.mark.parametrize("kind,window,cap", [("causal", None, 24),
+                                                 ("sliding", 6, 6)])
+    def test_stepwise_equals_full(self, kind, window, cap):
+        B, S, H, KH, D, dm = 2, 12, 4, 2, 8, 32
+        params = param_values(attention_init(KEY, dm, H, KH, D,
+                                             dtype=jnp.float32))
+        x = rand(jax.random.PRNGKey(7), B, S, dm)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        full, _ = attention_apply(params, x, pos, mask_kind=kind,
+                                  window=window)
+        cache = init_kv_cache(B, cap, KH, D, dtype=jnp.float32)
+        outs = []
+        for t in range(S):
+            o, cache = attention_apply(params, x[:, t:t + 1], pos[:, t:t + 1],
+                                       mask_kind=kind, window=window,
+                                       cache=cache)
+            outs.append(o)
+        step = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan vs naive recurrence
+# ---------------------------------------------------------------------------
+def naive_ssm(x, log_a, b, c):
+    """h_t = exp(log_a_t) h_{t-1} + b_t x_t^T; y_t = h_t c_t."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = np.repeat(np.asarray(b), rep, axis=2)
+    ch = np.repeat(np.asarray(c), rep, axis=2)
+    h = np.zeros((B, H, P, N))
+    ys = np.zeros((B, S, H, P))
+    for t in range(S):
+        da = np.exp(np.asarray(log_a)[:, t])           # [B,H]
+        h = h * da[..., None, None] + np.einsum(
+            "bhp,bhn->bhpn", np.asarray(x)[:, t], bh[:, t])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", h, ch[:, t])
+    return ys, h
+
+
+class TestSSD:
+    @pytest.mark.parametrize("chunk", [4, 8, 16])
+    def test_matches_naive(self, chunk):
+        B, S, H, P, G, N = 2, 16, 4, 4, 1, 8
+        ks = jax.random.split(KEY, 4)
+        x = rand(ks[0], B, S, H, P)
+        log_a = -jnp.abs(rand(ks[1], B, S, H)) * 0.5
+        b = rand(ks[2], B, S, G, N)
+        c = rand(ks[3], B, S, G, N)
+        y, h = ssd_chunked(x, log_a, b, c, chunk)
+        y_ref, h_ref = naive_ssm(x, log_a, b, c)
+        np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h), h_ref, rtol=1e-4, atol=1e-4)
+
+    def test_initial_state_chaining(self):
+        """Running two halves with carried state == one full pass."""
+        B, S, H, P, G, N = 1, 16, 2, 4, 1, 4
+        ks = jax.random.split(KEY, 4)
+        x = rand(ks[0], B, S, H, P)
+        log_a = -jnp.abs(rand(ks[1], B, S, H)) * 0.3
+        b = rand(ks[2], B, S, G, N)
+        c = rand(ks[3], B, S, G, N)
+        y_full, h_full = ssd_chunked(x, log_a, b, c, 4)
+        y1, h1 = ssd_chunked(x[:, :8], log_a[:, :8], b[:, :8], c[:, :8], 4)
+        y2, h2 = ssd_chunked(x[:, 8:], log_a[:, 8:], b[:, 8:], c[:, 8:], 4,
+                             initial_state=h1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMamba2Block:
+    def test_prefill_then_decode_matches_full(self):
+        cfg = SSMConfig(state_dim=8, head_dim=8, expand=2, conv_kernel=4,
+                        chunk=4)
+        dm, B, S = 16, 2, 10
+        params = param_values(mamba2_init(KEY, dm, cfg, dtype=jnp.float32))
+        x = rand(jax.random.PRNGKey(3), B, S, dm) * 0.3
+        full, _ = mamba2_apply(params, x, cfg)
+        from repro.models.ssm import init_ssm_cache
+        cache = init_ssm_cache(B, dm, cfg, dtype=jnp.float32)
+        outs = []
+        for t in range(S):
+            o, cache = mamba2_apply(params, x[:, t:t + 1], cfg, cache=cache)
+            outs.append(o)
+        step = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunked scan vs single-step recurrence
+# ---------------------------------------------------------------------------
+class TestMLSTM:
+    def test_chunked_matches_stepwise(self):
+        B, S, H, D = 2, 12, 2, 4
+        ks = jax.random.split(KEY, 5)
+        q = rand(ks[0], B, S, H, D)
+        k = rand(ks[1], B, S, H, D)
+        v = rand(ks[2], B, S, H, D)
+        ig = rand(ks[3], B, S, H)
+        fg = rand(ks[4], B, S, H) + 2.0
+        h_chunk, state_chunk = mlstm_scan(q, k, v, ig, fg, chunk=4)
+
+        state = (jnp.zeros((B, H, D, D)), jnp.zeros((B, H, D)),
+                 jnp.full((B, H), -1e30))
+        outs = []
+        for t in range(S):
+            o, state = mlstm_decode_step(q[:, t:t+1], k[:, t:t+1],
+                                         v[:, t:t+1], ig[:, t:t+1],
+                                         fg[:, t:t+1], state)
+            outs.append(o)
+        h_step = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_step),
+                                   rtol=2e-4, atol=2e-4)
+        for a, b in zip(state_chunk, state):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+    @given(chunk=st.sampled_from([2, 3, 4, 6, 12]))
+    @settings(max_examples=5, deadline=None)
+    def test_chunk_size_invariance(self, chunk):
+        B, S, H, D = 1, 12, 2, 4
+        ks = jax.random.split(jax.random.PRNGKey(chunk), 5)
+        q, k, v = (rand(kk, B, S, H, D) for kk in ks[:3])
+        ig = rand(ks[3], B, S, H)
+        fg = rand(ks[4], B, S, H) + 1.0
+        h_ref, _ = mlstm_scan(q, k, v, ig, fg, chunk=S)
+        h, _ = mlstm_scan(q, k, v, ig, fg, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch vs dense reference
+# ---------------------------------------------------------------------------
+class TestMoE:
+    def _dense_reference(self, params, x, cfg):
+        """Every token through its top-k experts, no capacity limits."""
+        B, S, d = x.shape
+        xf = np.asarray(x.reshape(B * S, d), np.float32)
+        logits = xf @ np.asarray(params["router"])
+        probs = jax.nn.softmax(jnp.asarray(logits), -1)
+        topv, topi = jax.lax.top_k(probs, cfg.top_k)
+        topv = np.asarray(topv / topv.sum(-1, keepdims=True))
+        topi = np.asarray(topi)
+        up, gate, down = (np.asarray(params[k], np.float32)
+                          for k in ("up", "gate", "down"))
+        out = np.zeros_like(xf)
+        for t in range(xf.shape[0]):
+            for j in range(cfg.top_k):
+                e = topi[t, j]
+                h = jax.nn.silu(jnp.asarray(xf[t] @ gate[e])) * (xf[t] @ up[e])
+                out[t] += topv[t, j] * np.asarray(h @ down[e])
+        return out.reshape(B, S, d)
+
+    def test_matches_dense_reference_with_big_capacity(self):
+        cfg = MoEConfig(n_routed_experts=4, top_k=2, d_expert=8,
+                        capacity_factor=8.0)
+        B, S, d = 2, 6, 16
+        params = param_values(moe_init(KEY, d, cfg, "swiglu",
+                                       dtype=jnp.float32))
+        x = rand(jax.random.PRNGKey(5), B, S, d) * 0.5
+        out, aux = moe_apply(params, x, cfg, "swiglu")
+        ref = self._dense_reference(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(out, np.float32), ref,
+                                   rtol=2e-3, atol=2e-3)
+        assert float(aux) >= 0.0
+
+    def test_capacity_drops_tokens_gracefully(self):
+        cfg = MoEConfig(n_routed_experts=2, top_k=1, d_expert=4,
+                        capacity_factor=0.1)
+        B, S, d = 2, 16, 8
+        params = param_values(moe_init(KEY, d, cfg, "swiglu",
+                                       dtype=jnp.float32))
+        x = rand(KEY, B, S, d)
+        out, _ = moe_apply(params, x, cfg, "swiglu", capacity=1)
+        assert out.shape == x.shape
+        assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# Perf-feature correctness (EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+class TestPerfFeatures:
+    def test_int8_kv_cache_decode_close_to_bf16(self):
+        """int8 KV cache (paper's INT8 CIM mode): greedy-equivalent."""
+        import dataclasses
+        from repro.configs import get_config, reduced_config
+        from repro.models import build_model
+        cfg = reduced_config(get_config("gemma-2b"))
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        m, m8 = build_model(cfg), build_model(cfg8)
+        params = m.init(KEY)
+        B, S = 2, 12
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+        c1, c2 = m.init_cache(B, 32), m8.init_cache(B, 32)
+        _, c1 = m.prefill(params, {"inputs": toks}, c1)
+        _, c2 = m8.prefill(params, {"inputs": toks}, c2)
+        step = {"inputs": jnp.ones((B, 1), jnp.int32)}
+        d1, _ = m.decode_step(params, step, c1)
+        d2, _ = m8.decode_step(params, step, c2)
+        assert bool((jnp.argmax(d1, -1) == jnp.argmax(d2, -1)).all())
+        p1 = jax.nn.softmax(d1[:, 0]); p2 = jax.nn.softmax(d2[:, 0])
+        assert float(jnp.max(jnp.abs(p1 - p2))) < 0.05
+
+    def test_multi_token_decode_matches_full_forward(self):
+        """Speculative verify step (S=4 new tokens) == full forward."""
+        from repro.configs import get_config, reduced_config
+        from repro.models import build_model
+        cfg = reduced_config(get_config("gemma-2b"))
+        m = build_model(cfg)
+        params = m.init(KEY)
+        B = 2
+        toks = jax.random.randint(jax.random.PRNGKey(2), (B, 16), 0,
+                                  cfg.vocab)
+        cache = m.init_cache(B, 32)
+        _, cache = m.prefill(params, {"inputs": toks[:, :12]}, cache)
+        # verify 4 draft tokens in one step
+        lg4, _ = m.decode_step(params, {"inputs": toks[:, 12:16]}, cache)
+        full, _, _ = m.forward(params, {"inputs": toks})
+        np.testing.assert_allclose(
+            np.asarray(lg4, np.float32), np.asarray(full[:, 12:16],
+                                                    np.float32),
+            rtol=2e-2, atol=2e-2)
