@@ -1,0 +1,16 @@
+# Developer entry points. The tier-1 gate is `make test` (everything);
+# `make test-fast` skips interpret-mode Pallas parity tests (marked
+# `slow` — they run the kernels through the CPU interpreter and
+# dominate suite wall-clock).
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PY) -m benchmarks.run

@@ -2,10 +2,19 @@
 
 On CPU these numbers measure the *interpreter*, not TPU performance —
 they exist to confirm the kernels execute and to provide the harness that
-would time them on real hardware (same entry points).
+would time them on real hardware (same entry points).  The fused-vs-
+unfused pairs track the INT8 epilogue fusion (quant -> GEMM -> dequant/
+bias/act in one Pallas kernel vs separate XLA passes around the GEMM):
+the dispatch-count and HBM-traffic win is structural, so the pair is
+reported on every backend.
+
+``python -m benchmarks.bench_kernels`` writes BENCH_kernels.json
+directly; ``python -m benchmarks.run`` includes these rows in the same
+trajectory file.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -14,6 +23,7 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(0)
+BENCH_JSON = "BENCH_kernels.json"
 
 
 def _time(fn, *args, reps=3):
@@ -27,15 +37,60 @@ def _time(fn, *args, reps=3):
 
 def bench_kernels():
     rows = []
-    k1, k2, k3 = jax.random.split(KEY, 3)
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
 
-    # cim_gemm 512x512x512 int8
-    x = jax.random.randint(k1, (512, 512), -127, 128, jnp.int8)
-    w = jax.random.randint(k2, (512, 512), -127, 128, jnp.int8)
-    t_kernel = _time(lambda a, b: ops.cim_quantized_matmul(
-        a.astype(jnp.float32), *ops.quantize_weights_int8(
-            b.astype(jnp.float32))), x, w)
-    rows.append(("kernel_cim_gemm_512", t_kernel, "int8 512^3 + dequant"))
+    # ------------------------------------------------------------------
+    # CIM GEMM 512^3: unfused (XLA quant + Pallas int32 GEMM + XLA
+    # dequant) vs fused (Pallas quantize kernel + fused-epilogue GEMM).
+    # ------------------------------------------------------------------
+    x = jax.random.normal(k1, (512, 512), jnp.float32)
+    w = jax.random.normal(k2, (512, 512), jnp.float32) * 0.1
+    w_q, w_s = ops.quantize_weights_int8(w)
+    t_unfused = _time(ops.cim_quantized_matmul, x, w_q, w_s)
+    rows.append(("kernel_cim_gemm_512_unfused", t_unfused,
+                 "int8 512^3; XLA quant/dequant around int32-out GEMM"))
+    t_fused = _time(ops.cim_quantized_matmul_fused, x, w_q, w_s)
+    rows.append(("kernel_cim_gemm_512_fused", t_fused,
+                 f"quant+GEMM+dequant in-kernel; "
+                 f"vs_unfused={t_unfused/t_fused:.2f}x"))
+
+    # ------------------------------------------------------------------
+    # Gated MLP (geglu, d=256 ff=512): the old 3-GEMM + XLA-elementwise
+    # pipeline vs the fused 3-dispatch pipeline (quantize, gated GEMM
+    # with in-epilogue requant, down GEMM).
+    # ------------------------------------------------------------------
+    d, ff = 256, 512
+    xm = jax.random.normal(k1, (256, d), jnp.float32) * 0.5
+    wu_q, wu_s = ops.quantize_weights_int8(
+        jax.random.normal(k2, (d, ff), jnp.float32) * 0.1)
+    wg_q, wg_s = ops.quantize_weights_int8(
+        jax.random.normal(k3, (d, ff), jnp.float32) * 0.1)
+    wd_q, wd_s = ops.quantize_weights_int8(
+        jax.random.normal(k4, (ff, d), jnp.float32) * 0.1)
+
+    @jax.jit
+    def mlp_unfused(a):
+        up = ops.cim_quantized_matmul(a, wu_q, wu_s)
+        gate = ops.cim_quantized_matmul(a, wg_q, wg_s)
+        h = jax.nn.gelu(gate, approximate=True) * up
+        return ops.cim_quantized_matmul(h, wd_q, wd_s)
+
+    def mlp_fused(a):
+        return ops.cim_quantized_mlp(a, wu_q, wu_s, wd_q, wd_s,
+                                     gate_q=wg_q, gate_scale=wg_s,
+                                     activation="gelu")
+
+    t_mlp_unfused = _time(mlp_unfused, xm)
+    rows.append(("kernel_gated_mlp_unfused", t_mlp_unfused,
+                 "geglu 256x256x512; 3 GEMM kernels + XLA act/dequant"))
+    t_mlp_fused = _time(mlp_fused, xm)
+    rows.append(("kernel_gated_mlp_fused", t_mlp_fused,
+                 f"quantize + gated GEMM + down GEMM (3 dispatches); "
+                 f"vs_unfused={t_mlp_unfused/t_mlp_fused:.2f}x"))
+
+    # row-quantize kernel on its own
+    t_q = _time(ops.quantize_rows_int8, xm)
+    rows.append(("kernel_quantize_rows", t_q, "dynamic row absmax int8"))
 
     # flash attention 2x256x4x32
     q = jax.random.normal(k1, (2, 256, 4, 32), jnp.float32)
@@ -70,3 +125,28 @@ def bench_kernels():
                  sm)
     rows.append(("kernel_online_softmax", t_sm, "512x4096 two-phase"))
     return rows
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> None:
+    """Persist (name, us, derived) rows as the cross-PR perf trajectory."""
+    payload = {
+        "_meta": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "note": "CPU rows time the Pallas interpreter, not TPU perf",
+        },
+        "benches": {name: {"us": round(us, 1), "derived": derived}
+                    for name, us, derived in rows},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    bench_rows = bench_kernels()
+    for name, us, derived in bench_rows:
+        print(f"{name},{us:.1f},{derived}")
+    write_bench_json(bench_rows)
+    print(f"wrote {BENCH_JSON}")

@@ -1,33 +1,62 @@
 """Benchmark aggregator — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-kernels]
+    PYTHONPATH=src python -m benchmarks.run [--skip-kernels] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows (derived holds the
-claim-relevant numbers, ours vs the paper's).
+claim-relevant numbers, ours vs the paper's) and writes the same rows to
+``BENCH_kernels.json`` (name -> µs + metadata) so the perf trajectory is
+machine-readable across PRs instead of only printed.
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import time
+
+
+def bench_explore_graph_cache():
+    """Workload-graph memoization win for the Table IV exploration sweep."""
+    from repro.core import explore
+
+    explore.clear_graph_cache()
+    t0 = time.perf_counter()
+    explore.run_exploration(quadrature=4)
+    cold = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    explore.run_exploration(quadrature=4)
+    warm = (time.perf_counter() - t0) * 1e6
+    info = explore._decode_graph.cache_info()
+    return [("explore_sweep_cold", cold,
+             f"graph cache cold; decode graphs built {info.misses}x"),
+            ("explore_sweep_warm", warm,
+             f"graph cache warm; speedup={cold/warm:.2f}x "
+             f"(hits={info.hits})")]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-kernels", action="store_true",
                     help="skip interpret-mode kernel microbenches (slow)")
+    ap.add_argument("--json", default=None,
+                    help="output path for BENCH_kernels.json "
+                         "(default: ./BENCH_kernels.json)")
     args = ap.parse_args()
 
+    from benchmarks.bench_kernels import BENCH_JSON, write_bench_json
     from benchmarks.paper_tables import ALL_BENCHES
 
     print("name,us_per_call,derived")
     rows = []
     for bench in ALL_BENCHES:
         rows.extend(bench())
+    rows.extend(bench_explore_graph_cache())
     if not args.skip_kernels:
         from benchmarks.bench_kernels import bench_kernels
         rows.extend(bench_kernels())
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    out_path = args.json or BENCH_JSON
+    write_bench_json(rows, out_path)
+    print(f"# wrote {out_path}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,13 @@
 """End-to-end serving driver (the paper is an inference paper): serve a
 small model with continuously-batched requests.
 
-    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py [--int8]
+
+``--int8`` serves in the paper's INT8 CIM mode: MLP weights quantized to
+int8 and every prefill/decode step running the fused quant -> GEMM ->
+dequant/act pipeline (Pallas kernels on TPU, their oracle on CPU).
 """
+import sys
 import time
 
 import jax
@@ -14,11 +19,14 @@ from repro.serving import Request, ServingEngine
 
 
 def main():
+    int8 = "--int8" in sys.argv
     cfg = reduced_config(get_config("gemma-2b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, n_slots=4, max_len=128,
-                           prefill_bucket=16)
+                           prefill_bucket=16, quantize_mlp=int8)
+    if int8:
+        print("serving with int8-quantized MLPs (fused CIM pipeline)")
 
     rng = np.random.default_rng(0)
     reqs = []

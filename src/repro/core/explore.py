@@ -11,6 +11,7 @@ CIM-MXU counts {2, 4, 8}, against the TPUv4i digital baseline.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 from .energy import DEFAULT_ENERGY_MODEL, EnergyModel
@@ -18,6 +19,26 @@ from .hardware import TPUConfig, exploration_configs, tpuv4i_baseline
 from .simulator import GraphCost, simulate_graph
 from .workloads import (ModelSpec, dit_graph, gpt3_30b, dit_xl2,
                         llm_decode_graph, llm_prefill_graph)
+
+
+# ---------------------------------------------------------------------------
+# Workload-graph memoization: the op list for a given (model, batch,
+# q_len/kv_len) point is identical across every hardware config and every
+# quadrature sweep — ``run_exploration`` alone would otherwise rebuild
+# each decode graph once per design point.  ModelSpec is a frozen
+# (hashable) dataclass, so the builders memoize cleanly; simulate_graph
+# only reads the Graph, so sharing one instance is safe.
+# ---------------------------------------------------------------------------
+_prefill_graph = functools.lru_cache(maxsize=512)(llm_prefill_graph)
+_decode_graph = functools.lru_cache(maxsize=512)(llm_decode_graph)
+_dit_graph = functools.lru_cache(maxsize=512)(dit_graph)
+
+
+def clear_graph_cache() -> None:
+    """Drop memoized workload graphs (benchmarking / memory pressure)."""
+    _prefill_graph.cache_clear()
+    _decode_graph.cache_clear()
+    _dit_graph.cache_clear()
 
 
 @dataclass
@@ -46,14 +67,14 @@ def llm_inference_cost(
     quadrature: int = 8,
 ) -> ScenarioCost:
     model = model or gpt3_30b()
-    prefill = simulate_graph(tpu, llm_prefill_graph(model, batch, prompt), em)
+    prefill = simulate_graph(tpu, _prefill_graph(model, batch, prompt), em)
 
     # Midpoint quadrature over the decode trajectory kv in (prompt, prompt+output].
     seg = output / quadrature
     dec_lat = dec_mxu = dec_tot = dec_attn = 0.0
     for i in range(quadrature):
         kv = int(prompt + (i + 0.5) * seg)
-        step = simulate_graph(tpu, llm_decode_graph(model, batch, kv), em)
+        step = simulate_graph(tpu, _decode_graph(model, batch, kv), em)
         dec_lat += step.latency_s * seg
         dec_mxu += step.mxu_energy_j * seg
         dec_tot += step.total_energy_j * seg
@@ -74,7 +95,7 @@ def llm_prefill_cost(tpu: TPUConfig, model: ModelSpec | None = None,
                      batch: int = 8, prompt: int = 1024,
                      em: EnergyModel = DEFAULT_ENERGY_MODEL) -> GraphCost:
     model = model or gpt3_30b()
-    return simulate_graph(tpu, llm_prefill_graph(model, batch, prompt), em)
+    return simulate_graph(tpu, _prefill_graph(model, batch, prompt), em)
 
 
 def llm_decode_cost(tpu: TPUConfig, model: ModelSpec | None = None,
@@ -83,14 +104,14 @@ def llm_decode_cost(tpu: TPUConfig, model: ModelSpec | None = None,
     """Paper §IV-B decode point: the 256th output token after a 1024
     prompt -> kv cache of 1280."""
     model = model or gpt3_30b()
-    return simulate_graph(tpu, llm_decode_graph(model, batch, kv_len), em)
+    return simulate_graph(tpu, _decode_graph(model, batch, kv_len), em)
 
 
 def dit_inference_cost(tpu: TPUConfig, model: ModelSpec | None = None,
                        batch: int = 8, image_res: int = 512,
                        em: EnergyModel = DEFAULT_ENERGY_MODEL) -> ScenarioCost:
     model = model or dit_xl2()
-    g = simulate_graph(tpu, dit_graph(model, batch, image_res), em)
+    g = simulate_graph(tpu, _dit_graph(model, batch, image_res), em)
     return ScenarioCost(
         name=f"{model.name}-r{image_res}-b{batch}",
         hw=tpu.name,

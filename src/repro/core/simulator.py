@@ -52,6 +52,11 @@ class GraphCost:
     graph_name: str
     op_costs: list[OpCost] = field(default_factory=list)
     repeat: int = 1
+    # Peak throughput of the TPUConfig this cost was simulated on; MFU is
+    # relative to *this* config (not a module-global keyed by graph name,
+    # which silently mixed configs when two hardware points simulated
+    # graphs of the same name, as run_exploration does).
+    peak_macs_per_second: float = 0.0
 
     # ---- aggregates (single repetition x repeat) -----------------------
     @property
@@ -119,11 +124,8 @@ class GraphCost:
             "macs": self.total_macs,
             "hbm_bytes": self.hbm_bytes,
             "mfu": self.total_macs / max(1e-30, self.latency_s)
-                   / max(1.0, _PEAK_CACHE.get(self.graph_name, 1.0)),
+                   / max(1.0, self.peak_macs_per_second),
         }
-
-
-_PEAK_CACHE: dict[str, float] = {}
 
 
 # ---------------------------------------------------------------------------
@@ -203,8 +205,8 @@ def simulate_op(tpu: TPUConfig, op: Op,
 
 def simulate_graph(tpu: TPUConfig, graph: Graph,
                    em: EnergyModel = DEFAULT_ENERGY_MODEL) -> GraphCost:
-    gc = GraphCost(graph_name=graph.name, repeat=graph.repeat)
-    _PEAK_CACHE[graph.name] = tpu.peak_macs_per_second
+    gc = GraphCost(graph_name=graph.name, repeat=graph.repeat,
+                   peak_macs_per_second=tpu.peak_macs_per_second)
     for op in graph:
         gc.op_costs.append(simulate_op(tpu, op, em))
     return gc

@@ -8,6 +8,30 @@ Kernels cover the compute hot-spots the paper optimizes: INT8
 weight-stationary GEMM (CIM-MXU mode), decode-GEMV attention, prefill
 flash attention, online softmax [27], and the SSD chunk scan for the
 SSM/hybrid assigned architectures.
+
+Fused INT8 epilogue pipeline
+----------------------------
+The paper's CIM-MXU quantizes activations in a *pre-processing unit*
+and rescales/activates in a *post-processing unit* inside the MXU
+pipeline — peripheral data movement, not the MACs, dominates CIM LLM
+inference cost, so nothing round-trips to HBM between those stages.
+The software mirror (cim_gemm.py):
+
+* ``quantize_rows_int8``      — pre-processing unit: dynamic row-absmax
+  activation quantization as one Pallas kernel (was an XLA f32 pass);
+* ``cim_gemm_int8_fused``     — MXU + post-processing unit: the int32
+  accumulator stays in VMEM scratch and the last K-step applies
+  dequant scales, optional bias, optional gelu/silu — with
+  ``quantize_out`` it re-quantizes the row block for the next GEMM;
+* ``cim_gated_gemm_int8``     — gated-MLP front half, ``act(gate)*up``
+  in the epilogue.
+
+Dispatch counts per gated MLP: previously 3 GEMM kernels + 5+ XLA
+quant/dequant/bias/activation ops with f32 (and int32) intermediates in
+HBM; now exactly 3 Pallas kernels (quantize, gated GEMM, down GEMM)
+with int8 tensors between them.  quant/linear.py exposes this as
+``quantized_mlp_apply(use_kernel=True)``; the serving engine's
+``quantize_mlp=True`` turns it on for the decode path.
 """
 from . import ops, ref
 

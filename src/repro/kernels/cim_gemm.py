@@ -1,4 +1,4 @@
-"""CIM-MXU GEMM kernel — TPU-native adaptation of the paper's INT8 mode.
+"""CIM-MXU GEMM kernels — TPU-native adaptation of the paper's INT8 mode.
 
 The paper's CIM-MXU holds a (16x8 cores) x (128x256) weight tile resident
 in SRAM and streams activations through it (weight-stationary, bit-serial
@@ -10,12 +10,47 @@ input broadcast, simultaneous compute + weight write).  The TPU analogue:
   grid orders K innermost so each weight block is loaded once per
   (m, n) tile, mirroring weight-stationarity);
 * double-buffered weight DMA (Pallas pipelines block fetches with
-  compute) standing in for the CIM macro's concurrent weight-port write;
-* per-output-channel scale dequantization in the epilogue, matching the
-  paper's post-processing unit.
+  compute) standing in for the CIM macro's concurrent weight-port write.
 
-ops.py wraps this with dynamic activation quantization; ref.py holds the
-pure-jnp oracle.
+Fused epilogue pipeline (pre/post-processing-unit mapping)
+----------------------------------------------------------
+The paper's MXU pipeline never round-trips intermediate tensors to HBM:
+a *pre-processing unit* quantizes incoming activations and a
+*post-processing unit* rescales (and, fused with the VPU, applies bias
+and the nonlinearity) before results leave the unit.  The kernels here
+mirror that structure one-for-one:
+
+``quantize_rows_int8``  (pre-processing unit)
+    Row-wise dynamic absmax int8 quantization as a single Pallas kernel:
+    ``x [M, K] f32/bf16 -> (x_q int8, x_scale f32 [M, 1])``.  Replaces
+    the XLA abs/max/round/clip chain that previously materialized an f32
+    copy of the activations.
+
+``cim_gemm_int8_fused``  (MXU + post-processing unit)
+    INT8 GEMM whose int32 accumulator lives only in VMEM scratch; at the
+    last K-step the epilogue applies ``acc * x_scale * w_scale`` (+ bias)
+    (+ gelu/silu/relu) and emits f32/bf16 — or, with ``quantize_out``,
+    re-quantizes the row block to int8 so the *next* GEMM can consume it
+    directly.  The int32 accumulator is never an HBM-resident output.
+
+``cim_gated_gemm_int8``  (fused gated MLP front half)
+    Two weight-stationary GEMMs (gate and up projections) sharing one
+    activation stream, with ``act(gate) * up`` computed in the epilogue.
+    With ``quantize_out`` the result is emitted pre-quantized for the
+    down projection, so a full gated MLP is exactly three Pallas
+    dispatches: quantize -> gated GEMM -> down GEMM (previously 3 GEMM
+    dispatches plus 5+ XLA quant/dequant/bias/activation ops with f32
+    intermediates in HBM).
+
+``cim_gemm_int8`` keeps the unfused int32-out path for parity tests and
+the fused-vs-unfused benchmark rows.
+
+``quantize_out`` requires the full N extent in one block (the row absmax
+is a cross-N reduction), i.e. ``grid_n == 1``; callers fall back to a
+separate ``quantize_rows_int8`` dispatch when N exceeds the VMEM budget.
+
+ops.py wraps these with padding + dispatch; ref.py holds the pure-jnp
+oracles.
 """
 from __future__ import annotations
 
@@ -30,7 +65,41 @@ from jax.experimental.pallas import tpu as pltpu
 CORE_K = 128
 CORE_N = 256
 
+# Above this many output columns the fused requant epilogue would hold
+# the whole row block in VMEM; fall back to a separate quantize kernel.
+MAX_FUSED_QUANT_N = 8192
 
+
+def _fit(dim: int, block: int) -> int:
+    block = min(block, dim)
+    while dim % block:
+        block //= 2
+    return max(1, block)
+
+
+def _apply_activation(x: jax.Array, activation: str | None) -> jax.Array:
+    if activation is None:
+        return x
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)  # tanh approx (paper §III-C)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    if activation == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown epilogue activation {activation!r}")
+
+
+def _rowquant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Row absmax int8 quantization of an f32 tile: (q, scale [rows, 1])."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Unfused INT8 GEMM (int32 out) — parity baseline + benchmark comparator
+# ---------------------------------------------------------------------------
 def _cim_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k_steps: int):
     """One (block_m x block_n) output tile; K swept innermost."""
     k_step = pl.program_id(2)
@@ -64,12 +133,6 @@ def cim_gemm_int8(x: jax.Array, w: jax.Array,
     K2, N = w.shape
     assert K == K2, (K, K2)
 
-    def _fit(dim: int, block: int) -> int:
-        block = min(block, dim)
-        while dim % block:
-            block //= 2
-        return max(1, block)
-
     block_m = _fit(M, block_m)
     block_n = _fit(N, block_n)
     block_k = _fit(K, block_k)
@@ -88,3 +151,247 @@ def cim_gemm_int8(x: jax.Array, w: jax.Array,
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
         interpret=interpret,
     )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Row-absmax activation quantization (pre-processing unit)
+# ---------------------------------------------------------------------------
+def _rowquant_kernel(x_ref, q_ref, s_ref):
+    q, scale = _rowquant(x_ref[...].astype(jnp.float32))
+    q_ref[...] = q
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def quantize_rows_int8(x: jax.Array, block_m: int = 256,
+                       interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Dynamic per-row symmetric int8: x [M, K] -> (q int8, scale f32 [M, 1]).
+
+    M must be a multiple of ``block_m`` after ops.py padding; the full K
+    extent sits in one block (the absmax is a row reduction).
+    """
+    M, K = x.shape
+    block_m = _fit(M, block_m)
+    grid = (M // block_m,)
+    return pl.pallas_call(
+        _rowquant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, K), lambda m: (m, 0))],
+        out_specs=[
+            pl.BlockSpec((block_m, K), lambda m: (m, 0)),
+            pl.BlockSpec((block_m, 1), lambda m: (m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue INT8 GEMM (MXU + post-processing unit)
+# ---------------------------------------------------------------------------
+def _cim_gemm_fused_kernel(*refs, n_k_steps: int, activation: str | None,
+                           has_bias: bool, quantize_out: bool):
+    if has_bias:
+        x_ref, w_ref, xs_ref, ws_ref, b_ref = refs[:5]
+        out_refs, acc_ref = refs[5:-1], refs[-1]
+    else:
+        x_ref, w_ref, xs_ref, ws_ref = refs[:4]
+        b_ref = None
+        out_refs, acc_ref = refs[4:-1], refs[-1]
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _epilogue():
+        # Post-processing unit: dequantize in VMEM — the int32
+        # accumulator never reaches HBM.
+        out = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        if has_bias:
+            out = out + b_ref[...]
+        out = _apply_activation(out, activation)
+        if quantize_out:
+            q, scale = _rowquant(out)
+            out_refs[0][...] = q
+            out_refs[1][...] = scale
+        else:
+            out_refs[0][...] = out.astype(out_refs[0].dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "out_dtype", "quantize_out", "block_m", "block_n",
+    "block_k", "interpret"))
+def cim_gemm_int8_fused(x: jax.Array, w: jax.Array, x_scale: jax.Array,
+                        w_scale: jax.Array, bias: jax.Array | None = None,
+                        activation: str | None = None,
+                        out_dtype=jnp.float32, quantize_out: bool = False,
+                        block_m: int = 256, block_n: int = 2 * CORE_N,
+                        block_k: int = 4 * CORE_K,
+                        interpret: bool = False):
+    """INT8 GEMM with fused dequant/bias/activation epilogue.
+
+    x [M, K] int8 @ w [K, N] int8, rescaled by ``x_scale [M, 1]`` and
+    ``w_scale [1, N]`` at the last K-step -> [M, N] ``out_dtype``; or,
+    with ``quantize_out``, -> (q int8 [M, N], scale f32 [M, 1]) ready for
+    the next GEMM.  Dims must be multiples of the block sizes (ops.py
+    pads); ``quantize_out`` forces a single N block.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (K, K2)
+    assert x_scale.shape == (M, 1), x_scale.shape
+    assert w_scale.shape == (1, N), w_scale.shape
+
+    block_m = _fit(M, block_m)
+    block_k = _fit(K, block_k)
+    block_n = N if quantize_out else _fit(N, block_n)
+
+    n_k_steps = K // block_k
+    grid = (M // block_m, N // block_n, n_k_steps)
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+        pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+        pl.BlockSpec((block_m, 1), lambda m, n, k: (m, 0)),
+        pl.BlockSpec((1, block_n), lambda m, n, k: (0, n)),
+    ]
+    operands = [x, w, x_scale, w_scale]
+    if bias is not None:
+        assert bias.shape == (1, N), bias.shape
+        in_specs.append(pl.BlockSpec((1, block_n), lambda m, n, k: (0, n)))
+        operands.append(bias)
+
+    if quantize_out:
+        out_specs = [
+            pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+            pl.BlockSpec((block_m, 1), lambda m, n, k: (m, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((M, N), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n))
+        out_shape = jax.ShapeDtypeStruct((M, N), out_dtype)
+
+    return pl.pallas_call(
+        functools.partial(_cim_gemm_fused_kernel, n_k_steps=n_k_steps,
+                          activation=activation, has_bias=bias is not None,
+                          quantize_out=quantize_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Fused gated-MLP front half: act(x @ Wg) * (x @ Wu) in one dispatch
+# ---------------------------------------------------------------------------
+def _cim_gated_kernel(x_ref, wg_ref, wu_ref, xs_ref, gs_ref, us_ref, *refs,
+                      n_k_steps: int, activation: str, quantize_out: bool):
+    out_refs = refs[:-2]
+    acc_g_ref, acc_u_ref = refs[-2:]
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_g_ref[...] = jnp.zeros_like(acc_g_ref)
+        acc_u_ref[...] = jnp.zeros_like(acc_u_ref)
+
+    dims = (((1,), (0,)), ((), ()))
+    x = x_ref[...]
+    acc_g_ref[...] += jax.lax.dot_general(
+        x, wg_ref[...], dims, preferred_element_type=jnp.int32)
+    acc_u_ref[...] += jax.lax.dot_general(
+        x, wu_ref[...], dims, preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _epilogue():
+        xs = xs_ref[...]
+        g = acc_g_ref[...].astype(jnp.float32) * xs * gs_ref[...]
+        u = acc_u_ref[...].astype(jnp.float32) * xs * us_ref[...]
+        h = _apply_activation(g, activation) * u
+        if quantize_out:
+            q, scale = _rowquant(h)
+            out_refs[0][...] = q
+            out_refs[1][...] = scale
+        else:
+            out_refs[0][...] = h.astype(out_refs[0].dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "out_dtype", "quantize_out", "block_m", "block_n",
+    "block_k", "interpret"))
+def cim_gated_gemm_int8(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                        x_scale: jax.Array, gate_scale: jax.Array,
+                        up_scale: jax.Array, activation: str = "gelu",
+                        out_dtype=jnp.float32, quantize_out: bool = False,
+                        block_m: int = 256, block_n: int = 2 * CORE_N,
+                        block_k: int = 4 * CORE_K,
+                        interpret: bool = False):
+    """Fused gated-MLP front half: ``act(x@Wg) * (x@Wu)`` in one kernel.
+
+    The gate and up projections share the int8 activation stream; both
+    int32 accumulators live in VMEM scratch and the gating product is
+    formed in the epilogue.  With ``quantize_out`` the hidden state is
+    re-quantized in-epilogue, so the down projection consumes int8
+    directly and the f32 hidden state never reaches HBM either.
+    """
+    M, K = x.shape
+    K2, N = w_gate.shape
+    assert K == K2 and w_up.shape == (K, N), (x.shape, w_gate.shape,
+                                              w_up.shape)
+    assert x_scale.shape == (M, 1), x_scale.shape
+    assert gate_scale.shape == (1, N) and up_scale.shape == (1, N)
+
+    block_m = _fit(M, block_m)
+    block_k = _fit(K, block_k)
+    block_n = N if quantize_out else _fit(N, block_n)
+
+    n_k_steps = K // block_k
+    grid = (M // block_m, N // block_n, n_k_steps)
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+        pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+        pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+        pl.BlockSpec((block_m, 1), lambda m, n, k: (m, 0)),
+        pl.BlockSpec((1, block_n), lambda m, n, k: (0, n)),
+        pl.BlockSpec((1, block_n), lambda m, n, k: (0, n)),
+    ]
+    if quantize_out:
+        out_specs = [
+            pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+            pl.BlockSpec((block_m, 1), lambda m, n, k: (m, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((M, N), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n))
+        out_shape = jax.ShapeDtypeStruct((M, N), out_dtype)
+
+    return pl.pallas_call(
+        functools.partial(_cim_gated_kernel, n_k_steps=n_k_steps,
+                          activation=activation, quantize_out=quantize_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32),
+                        pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, x_scale, gate_scale, up_scale)

@@ -13,7 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
-from .cim_gemm import cim_gemm_int8, CORE_K, CORE_N
+from . import cim_gemm as _cg
+from .cim_gemm import (cim_gemm_int8, cim_gemm_int8_fused,
+                       cim_gated_gemm_int8, CORE_K, CORE_N,
+                       MAX_FUSED_QUANT_N)
 from .decode_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .online_softmax import online_softmax as _softmax_kernel
@@ -66,6 +69,129 @@ def cim_quantized_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     acc = cim_gemm_int8(x_q, w_p, interpret=interpret)
     acc = acc[:M, :N].astype(jnp.float32)
     return acc * x_scale * w_scale[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Fused INT8 epilogue pipeline (quant -> GEMM -> dequant/bias/act, one
+# kernel per GEMM; the int32 accumulator never leaves VMEM)
+# ---------------------------------------------------------------------------
+def _pad_acts(x):
+    """Pad activations to the kernel grid: M -> 256-mult, K -> CORE_K."""
+    x_p, M = _pad_to(x, 0, 256)
+    x_p, K = _pad_to(x_p, 1, CORE_K)
+    return x_p, M, K
+
+
+def _pad_weight(w_q, w_scale):
+    """Pad an int8 weight + its [N] scale: K -> CORE_K, N -> CORE_N."""
+    w_p, _ = _pad_to(w_q, 0, CORE_K)
+    w_p, N = _pad_to(w_p, 1, CORE_N)
+    ws_p, _ = _pad_to(w_scale[None, :], 1, CORE_N)
+    return w_p, ws_p, N
+
+
+def _pad_operands(x, w_q, w_scale, bias=None):
+    """Pad (x int8-able acts, int8 weights, scales, bias) to block grids."""
+    x_p, M, K = _pad_acts(x)
+    w_p, ws_p, N = _pad_weight(w_q, w_scale)
+    b_p = None
+    if bias is not None:
+        b_p, _ = _pad_to(bias.astype(jnp.float32)[None, :], 1, CORE_N)
+    return x_p, w_p, ws_p, b_p, M, K, N
+
+
+def quantize_rows_int8(x: jax.Array,
+                       interpret: bool | None = None) -> tuple[jax.Array,
+                                                               jax.Array]:
+    """Pallas dynamic per-row activation quantization.
+
+    x [M, K] f32/bf16 -> (q int8 [M, K], scale f32 [M, 1]); replaces the
+    XLA abs/max/round/clip chain (the paper's pre-processing unit).
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    x_p, M = _pad_to(x, 0, 256)
+    x_p, K = _pad_to(x_p, 1, CORE_K)
+    q, s = _cg.quantize_rows_int8(x_p, interpret=interpret)
+    return q[:M, :K], s[:M]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "out_dtype",
+                                             "interpret"))
+def cim_quantized_matmul_fused(x: jax.Array, w_q: jax.Array,
+                               w_scale: jax.Array,
+                               bias: jax.Array | None = None,
+                               activation: str | None = None,
+                               out_dtype=jnp.float32,
+                               interpret: bool | None = None) -> jax.Array:
+    """Fully fused quantized linear: one quantize kernel + one fused GEMM.
+
+    x [M, K] bf16/f32; w_q [K, N] int8; w_scale [N]; optional bias [N]
+    and gelu/silu/relu epilogue -> [M, N] ``out_dtype``.  No XLA
+    dequant/bias/activation ops run between the kernels.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    x_p, w_p, ws_p, b_p, M, K, N = _pad_operands(x, w_q, w_scale, bias)
+    x_q, x_s = _cg.quantize_rows_int8(x_p, interpret=interpret)
+    out = cim_gemm_int8_fused(x_q, w_p, x_s, ws_p, bias=b_p,
+                              activation=activation, out_dtype=out_dtype,
+                              interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "out_dtype",
+                                             "interpret"))
+def cim_quantized_mlp(x: jax.Array, up_q: jax.Array, up_scale: jax.Array,
+                      down_q: jax.Array, down_scale: jax.Array,
+                      gate_q: jax.Array | None = None,
+                      gate_scale: jax.Array | None = None,
+                      activation: str = "gelu", out_dtype=jnp.float32,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused INT8 MLP: quantize + (gated) up GEMM + down GEMM — 3 Pallas
+    dispatches total, no XLA elementwise math between them.
+
+    The up/gated kernel's epilogue computes ``act(gate) * up`` *and*
+    re-quantizes the hidden state to int8 (when d_ff fits the VMEM row
+    budget), so the down GEMM consumes int8 directly; neither the int32
+    accumulators nor the f32 hidden state round-trip through HBM.
+
+    Weight padding short-circuits to a no-op when d_model/d_ff are
+    already CORE_K/CORE_N-aligned (every real serving config); only
+    toy/ragged dims pay a per-call pad copy.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    d_ff = up_q.shape[1]
+    N = down_q.shape[1]
+
+    x_p, M, _ = _pad_acts(x)
+    up_p, us_p, _ = _pad_weight(up_q, up_scale)
+    ff_p = up_p.shape[1]
+    fuse_requant = ff_p <= MAX_FUSED_QUANT_N
+
+    x_q, x_s = _cg.quantize_rows_int8(x_p, interpret=interpret)
+
+    if gate_q is not None:
+        g_p, gs_p, _ = _pad_weight(gate_q, gate_scale)
+        h = cim_gated_gemm_int8(x_q, g_p, up_p, x_s, gs_p, us_p,
+                                activation=activation,
+                                quantize_out=fuse_requant,
+                                interpret=interpret)
+    else:
+        h = cim_gemm_int8_fused(x_q, up_p, x_s, us_p, activation=activation,
+                                quantize_out=fuse_requant,
+                                interpret=interpret)
+    if fuse_requant:
+        h_q, h_s = h
+    else:
+        # d_ff too wide for the in-epilogue row reduction: one extra
+        # quantize dispatch (still no XLA dequant/activation ops).
+        h_q, h_s = _cg.quantize_rows_int8(h, interpret=interpret)
+
+    # down's K dim must match the (256-padded) hidden width ff_p
+    down_p, ds_p, _ = _pad_weight(
+        jnp.pad(down_q, ((0, ff_p - d_ff), (0, 0))), down_scale)
+    out = cim_gemm_int8_fused(h_q, down_p, h_s, ds_p, out_dtype=out_dtype,
+                              interpret=interpret)
+    return out[:M, :N]
 
 
 # ---------------------------------------------------------------------------

@@ -13,15 +13,80 @@ def cim_gemm_int8_ref(x: jax.Array, w: jax.Array) -> jax.Array:
                                preferred_element_type=jnp.int32)
 
 
+def quantize_rows_int8_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dynamic per-row symmetric int8: x [M, K] -> (q, scale [M, 1])."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def quantized_matmul_ref(x: jax.Array, w_q: jax.Array,
                          w_scale: jax.Array) -> jax.Array:
     """bf16/f32 activations x per-channel-int8 weights (dequant ref)."""
-    x32 = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) + 1e-12
-    x_scale = amax / 127.0
-    x_q = jnp.clip(jnp.round(x32 / x_scale), -127, 127).astype(jnp.int8)
+    x_q, x_scale = quantize_rows_int8_ref(x)
     acc = cim_gemm_int8_ref(x_q, w_q).astype(jnp.float32)
     return acc * x_scale * w_scale[None, :]
+
+
+def _activate_ref(x: jax.Array, activation: str | None) -> jax.Array:
+    if activation is None:
+        return x
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    if activation == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(activation)
+
+
+def fused_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                     bias: jax.Array | None = None,
+                     activation: str | None = None,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the fused epilogue: quant -> GEMM -> dequant/bias/act."""
+    x_q, x_scale = quantize_rows_int8_ref(x)
+    out = cim_gemm_int8_ref(x_q, w_q).astype(jnp.float32)
+    out = out * x_scale * w_scale[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return _activate_ref(out, activation).astype(out_dtype)
+
+
+def gated_mlp_hidden_ref(x: jax.Array, g_q: jax.Array, g_scale: jax.Array,
+                         u_q: jax.Array, u_scale: jax.Array,
+                         activation: str = "gelu") -> jax.Array:
+    """Oracle for the fused gated front half: act(x@Wg) * (x@Wu), f32."""
+    x_q, x_scale = quantize_rows_int8_ref(x)
+    g = cim_gemm_int8_ref(x_q, g_q).astype(jnp.float32) * x_scale \
+        * g_scale[None, :]
+    u = cim_gemm_int8_ref(x_q, u_q).astype(jnp.float32) * x_scale \
+        * u_scale[None, :]
+    return _activate_ref(g, activation) * u
+
+
+def quantized_mlp_ref(x: jax.Array, qtree: dict, activation: str,
+                      out_dtype=jnp.float32) -> jax.Array:
+    """End-to-end oracle for the fused int8 MLP pipeline.
+
+    ``qtree``: {'up': (q, scale)[, 'gate': ...], 'down': (q, scale)}.
+    ``activation`` is a canonical kernel name ("gelu"|"silu"|"relu");
+    quant/linear.py owns the geglu/swiglu alias mapping.  Mirrors the
+    kernel pipeline exactly, including the int8 requant of the hidden
+    state between the two GEMMs.
+    """
+    if "gate" in qtree:
+        h = gated_mlp_hidden_ref(x, qtree["gate"][0], qtree["gate"][1],
+                                 qtree["up"][0], qtree["up"][1], activation)
+    else:
+        h = fused_matmul_ref(x, qtree["up"][0], qtree["up"][1],
+                             activation=activation)
+    h_q, h_scale = quantize_rows_int8_ref(h)
+    out = cim_gemm_int8_ref(h_q, qtree["down"][0]).astype(jnp.float32)
+    out = out * h_scale * qtree["down"][1][None, :]
+    return out.astype(out_dtype)
 
 
 def flash_attention_ref(q, k, v, causal=True, window=None):

@@ -72,6 +72,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis() or {}
+            if isinstance(cost, (list, tuple)):  # older jax: [dict]
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
     except Exception as e:  # noqa: BLE001 - report per-cell failures
         record.update(status="failed", error=f"{type(e).__name__}: {e}",

@@ -193,8 +193,23 @@ def _activate(name: str, x: jax.Array) -> jax.Array:
     raise ValueError(f"unknown activation {name!r}")
 
 
+def mlp_is_quantized(params: dict) -> bool:
+    """True if the MLP value tree holds int8 QuantizedLinear leaves."""
+    from repro.quant.linear import QuantizedLinear  # local import: no cycle
+    return isinstance(params.get("up"), QuantizedLinear)
+
+
 def mlp_apply(params: dict, x: jax.Array, activation: str = "gelu") -> jax.Array:
     from repro.parallel.context import shard  # local import: no cycle
+    if mlp_is_quantized(params):
+        # INT8 serving path: dispatches the fused Pallas pipeline (one
+        # quantize + two fused GEMM kernels) on TPU, its oracle on CPU.
+        # The hidden state lives inside the kernel, so the bf16 path's
+        # shard(h, "mlp") TP constraint has no tensor to attach to —
+        # this path assumes unsharded MLP weights (serving engine's
+        # single-chip decode); TP'd fused kernels need shard_map.
+        from repro.quant.linear import quantized_mlp_apply
+        return quantized_mlp_apply(params, x, activation, use_kernel=None)
     hidden_axes = ("batch",) + (None,) * (x.ndim - 2) + ("mlp",)
     up = jnp.einsum("...d,df->...f", x, params["up"])
     if "gate" in params:

@@ -418,6 +418,33 @@ class Model:
                 return g["index"][0]
         raise KeyError("no cache index found")
 
+    # -- serving-side weight quantization ------------------------------------
+    def quantize_mlps(self, params):
+        """Swap every dense-FFN block's MLP weights for int8
+        :class:`~repro.quant.linear.QuantizedLinear` leaves (per layer of
+        each stacked group, via vmap).  ``mlp_apply`` detects the
+        quantized leaves and dispatches the fused INT8 Pallas pipeline
+        (one quantize + two fused GEMM kernels per gated MLP) — this is
+        the serving engine's decode path in INT8 mode."""
+        from repro.kernels import ops as kops
+        from repro.quant.linear import QuantizedLinear
+
+        out = dict(params)
+        for gi, (spec, _count) in enumerate(self.groups):
+            _mixer, ffn = spec
+            if ffn != "dense":
+                continue
+            group = dict(out[f"group_{gi}"])
+            mlp = dict(group["mlp"])
+            for name in ("up", "gate", "down"):
+                if name in mlp:
+                    q, s = jax.vmap(kops.quantize_weights_int8)(
+                        mlp[name].astype(jnp.float32))
+                    mlp[name] = QuantizedLinear(q, s)
+            group["mlp"] = mlp
+            out[f"group_{gi}"] = group
+        return out
+
     # -- caches ---------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int):
         caches = {}

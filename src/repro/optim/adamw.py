@@ -72,7 +72,7 @@ def update(cfg: AdamWConfig, schedule: Optional[Callable] = None):
         bc2 = 1 - b2 ** step.astype(jnp.float32)
         dt = _mdtype(cfg)
 
-        flat_g, tdef = jax.tree.flatten_with_path(grads)
+        flat_g, tdef = jax.tree_util.tree_flatten_with_path(grads)
         flat_mu = jax.tree.leaves(state["mu"])
         flat_nu = jax.tree.leaves(state["nu"])
         flat_p = jax.tree.leaves(params)

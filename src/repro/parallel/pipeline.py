@@ -24,11 +24,14 @@ from jax.experimental.shard_map import shard_map
 
 
 def gpipe_loop(stage_fn: Callable, stage_params, micro_x: jax.Array,
-               axis_name: str) -> jax.Array:
+               axis_name: str, n_stages: int | None = None) -> jax.Array:
     """Runs inside shard_map.  micro_x: [M, mb, ...] (valid on stage 0);
     stage_params: this stage's parameter tree.  Returns [M, mb, ...]
-    outputs (valid on the last stage)."""
-    n_stages = jax.lax.axis_size(axis_name)
+    outputs (valid on the last stage).  ``n_stages`` is the static
+    pipeline depth (mesh axis size); older jax has no
+    ``jax.lax.axis_size`` to recover it inside shard_map."""
+    if n_stages is None:
+        n_stages = jax.lax.axis_size(axis_name)
     stage = jax.lax.axis_index(axis_name)
     M = micro_x.shape[0]
     T = M + n_stages - 1
@@ -76,7 +79,7 @@ def pipeline_apply(mesh: Mesh, axis_name: str, stage_fn: Callable,
     fn = shard_map(
         lambda p, mx: gpipe_loop(
             lambda pp, xx: stage_fn(jax.tree.map(lambda a: a[0], pp), xx),
-            p, mx, axis_name),
+            p, mx, axis_name, n_stages=mesh.shape[axis_name]),
         mesh=mesh,
         in_specs=(param_specs, P()),
         out_specs=P(),

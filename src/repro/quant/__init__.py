@@ -1,5 +1,5 @@
-from .linear import (dequantize_tree, quantize_mlp, quantized_mlp_apply,
-                     QuantizedLinear)
+from .linear import (dequantize_tree, quantize_linear, quantize_mlp,
+                     quantized_matmul, quantized_mlp_apply, QuantizedLinear)
 
-__all__ = ["QuantizedLinear", "quantize_mlp", "quantized_mlp_apply",
-           "dequantize_tree"]
+__all__ = ["QuantizedLinear", "quantize_linear", "quantize_mlp",
+           "quantized_matmul", "quantized_mlp_apply", "dequantize_tree"]

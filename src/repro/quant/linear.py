@@ -1,13 +1,21 @@
 """INT8 weight quantization for serving — the paper's INT8 CIM mode,
-end to end on the Pallas `cim_gemm` kernel.
+end to end on the Pallas `cim_gemm` kernels.
 
 The paper evaluates all workloads at INT8 ("using INT8 data precision",
 §IV-B): weights live in the CIM arrays as int8, activations are
 quantized by the pre-processing unit, and the post-processing unit
-rescales.  This module is the software mirror: per-output-channel int8
-weights + dynamic per-row activation quantization + f32 rescale, with
-the matmul dispatched to ``kernels.ops.cim_quantized_matmul`` (the
-weight-stationary Pallas kernel) on TPU, or its jnp oracle elsewhere.
+rescales — all *inside* the MXU pipeline, nothing round-trips to HBM
+between the stages.  This module is the software mirror: per-output-
+channel int8 weights + dynamic per-row activation quantization + f32
+rescale/bias/activation, dispatched to the **fused** Pallas pipeline
+(``kernels.ops.cim_quantized_matmul_fused`` / ``cim_quantized_mlp``)
+when ``use_kernel`` is set, or to the matching jnp oracle otherwise.
+
+With ``use_kernel=True`` a gated MLP is exactly one quantize kernel plus
+two fused GEMM kernels (gated front half with in-epilogue requant, then
+the down projection); no XLA dequant/bias/activation ops run between
+them and the int32 accumulators never leave VMEM.  ``use_kernel=None``
+auto-selects: fused kernels on TPU, the identical-math oracle on CPU.
 
 Used by the serving path for MLP blocks (the dominant decode weight
 traffic); validated against the bf16 reference in tests/test_quant.py.
@@ -30,25 +38,47 @@ class QuantizedLinear(NamedTuple):
     scale: jax.Array    # f32 [out]
 
 
+def _resolve_use_kernel(use_kernel: bool | None) -> bool:
+    if use_kernel is None:
+        return jax.default_backend() != "cpu"
+    return use_kernel
+
+
+def _canon_activation(activation: str | None) -> str | None:
+    if activation in ("gelu", "geglu"):
+        return "gelu"
+    if activation in ("silu", "swiglu"):
+        return "silu"
+    return activation
+
+
 def quantize_linear(w: jax.Array) -> QuantizedLinear:
     q, s = kops.quantize_weights_int8(w.astype(jnp.float32))
     return QuantizedLinear(q, s)
 
 
 def quantized_matmul(x: jax.Array, w: QuantizedLinear,
-                     use_kernel: bool = False) -> jax.Array:
-    """x [..., K] @ int8 W -> f32 [..., N].
+                     use_kernel: bool | None = False,
+                     bias: jax.Array | None = None,
+                     activation: str | None = None) -> jax.Array:
+    """x [..., K] @ int8 W (+ bias, + activation) -> f32 [..., N].
 
-    use_kernel=True dispatches the Pallas cim_gemm (interpret mode on
-    CPU — exact same integer math, slower); False uses the jnp oracle
-    (identical numerics, fast on CPU).
+    use_kernel=True dispatches the fused Pallas pipeline: a row-quantize
+    kernel plus one GEMM whose epilogue applies dequant/bias/activation
+    in VMEM (interpret mode on CPU — same integer math, slower); False
+    uses the jnp oracle (identical numerics, fast on CPU); None picks
+    the kernel exactly when running on a TPU backend.
     """
+    use_kernel = _resolve_use_kernel(use_kernel)
+    activation = _canon_activation(activation)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if use_kernel:
-        out = kops.cim_quantized_matmul(x2, w.q, w.scale)
+        out = kops.cim_quantized_matmul_fused(x2, w.q, w.scale, bias=bias,
+                                              activation=activation)
     else:
-        out = kref.quantized_matmul_ref(x2, w.q, w.scale)
+        out = kref.fused_matmul_ref(x2, w.q, w.scale, bias=bias,
+                                    activation=activation)
     return out.reshape(*lead, -1)
 
 
@@ -63,18 +93,32 @@ def quantize_mlp(mlp_params: dict) -> dict:
 
 
 def quantized_mlp_apply(qparams: dict, x: jax.Array, activation: str,
-                        use_kernel: bool = False) -> jax.Array:
-    up = quantized_matmul(x, qparams["up"], use_kernel)
-    if "gate" in qparams:
-        g = quantized_matmul(x, qparams["gate"], use_kernel)
-        act = jax.nn.gelu(g, approximate=True) \
-            if activation in ("gelu", "geglu") else jax.nn.silu(g)
-        h = act * up
+                        use_kernel: bool | None = False) -> jax.Array:
+    """Quantized MLP block on the fused INT8 pipeline.
+
+    use_kernel=True: one quantize kernel + two fused GEMM kernels per
+    gated MLP (the gated front half computes ``act(gate) * up`` and
+    re-quantizes the hidden state in its epilogue; the down GEMM
+    consumes int8 directly).  Non-gated MLPs fuse the activation into
+    the up GEMM's epilogue instead.  use_kernel=False runs the jnp
+    oracle with identical numerics; None auto-selects by backend.
+    """
+    use_kernel = _resolve_use_kernel(use_kernel)
+    act = _canon_activation(activation)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_kernel:
+        gate = qparams.get("gate")
+        out = kops.cim_quantized_mlp(
+            x2, qparams["up"].q, qparams["up"].scale,
+            qparams["down"].q, qparams["down"].scale,
+            gate_q=None if gate is None else gate.q,
+            gate_scale=None if gate is None else gate.scale,
+            activation=act)
     else:
-        h = jax.nn.gelu(up, approximate=True) \
-            if activation in ("gelu", "geglu") else jax.nn.silu(up)
-    out = quantized_matmul(h.astype(jnp.float32), qparams["down"], use_kernel)
-    return out.astype(x.dtype)
+        qtree = {k: (v.q, v.scale) for k, v in qparams.items()}
+        out = kref.quantized_mlp_ref(x2, qtree, act)
+    return out.reshape(*lead, -1).astype(x.dtype)
 
 
 def dequantize_tree(qtree: dict) -> dict:

@@ -53,8 +53,16 @@ class EngineStats:
 
 class ServingEngine:
     def __init__(self, model, params, n_slots: int = 4,
-                 max_len: int = 512, prefill_bucket: int = 64):
+                 max_len: int = 512, prefill_bucket: int = 64,
+                 quantize_mlp: bool = False):
         self.model = model
+        if quantize_mlp:
+            # INT8 decode path (the paper's CIM serving mode): dense-FFN
+            # weights become int8 QuantizedLinear leaves and every
+            # prefill/decode step runs the fused quant->GEMM->dequant/
+            # act Pallas pipeline instead of bf16 einsums + XLA
+            # elementwise ops.
+            params = model.quantize_mlps(params)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len

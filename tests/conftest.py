@@ -1,0 +1,91 @@
+"""Shared test plumbing.
+
+Two jobs:
+
+* Register the ``slow`` marker (interpret-mode Pallas parity tests —
+  minutes on the CPU interpreter).  ``make test-fast`` /
+  ``pytest -m "not slow"`` runs only the fast jnp-oracle tier.
+* Provide a deterministic fallback for ``hypothesis`` when the real
+  package is not installed (this container bakes in the jax toolchain
+  only).  The shim reuses the exact subset of the API these tests touch
+  (``given``/``settings``/``strategies.{sampled_from,integers,floats,
+  booleans}``) and sweeps each strategy's boundary values (lo/mid/hi)
+  diagonally instead of random sampling — fewer examples, same shape
+  coverage, fully reproducible.  With hypothesis installed the shim is
+  inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+
+def _install_hypothesis_stub() -> None:
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ModuleNotFoundError:
+        pass
+
+    class _Strategy:
+        def __init__(self, samples):
+            # de-dup, keep order, materialize
+            self.samples = list(dict.fromkeys(samples))
+
+    def sampled_from(values):
+        return _Strategy(values)
+
+    def integers(min_value, max_value):
+        return _Strategy([min_value, (min_value + max_value) // 2, max_value])
+
+    def floats(min_value, max_value, **_kw):
+        return _Strategy([min_value, (min_value + max_value) / 2.0,
+                          max_value])
+
+    def booleans():
+        return _Strategy([False, True])
+
+    def given(**kwargs):
+        names = list(kwargs)
+        pools = [kwargs[n].samples for n in names]
+        n_cases = max(len(p) for p in pools) if pools else 0
+        cases = [tuple(pool[i % len(pool)] for pool in pools)
+                 for i in range(n_cases)]
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                for case in cases:
+                    fn(*args, **dict(zip(names, case)), **kw)
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (inspect.signature honors __signature__ over
+            # the __wrapped__ chain functools.wraps sets up)
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in kwargs])
+            return wrapper
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.sampled_from = sampled_from
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    hyp.strategies = st
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install_hypothesis_stub()

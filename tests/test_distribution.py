@@ -14,8 +14,15 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.parallel.sharding import DEFAULT_RULES, resolve_spec
 
-MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
-MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)              # jax >= 0.5
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # jax 0.4.x
+
+
+MESH_1POD = _abstract_mesh((16, 16), ("data", "model"))
+MESH_2POD = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 REPO = Path(__file__).resolve().parent.parent
 
 

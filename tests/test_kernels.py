@@ -9,6 +9,9 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ops, ref
 from repro.kernels.cim_gemm import cim_gemm_int8
 
+# every test here drives the Pallas kernels through the CPU interpreter
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 
@@ -72,6 +75,131 @@ class TestCimGemm:
         out = cim_gemm_int8(x, w, interpret=True)
         assert (np.asarray(out) ==
                 np.asarray(ref.cim_gemm_int8_ref(x, w))).all()
+
+
+# ---------------------------------------------------------------------------
+# fused INT8 epilogue pipeline (quant -> GEMM -> dequant/bias/act)
+# ---------------------------------------------------------------------------
+RAGGED_SHAPES = [(48, 200, 300),    # nothing block-aligned
+                 (17, 128, 256),    # ragged M only
+                 (256, 512, 384),   # block-multiple M/K, ragged N
+                 (512, 512, 512)]   # fully aligned
+
+
+class TestQuantizeRows:
+    @pytest.mark.parametrize("m,k", [(48, 200), (17, 128), (256, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, m, k, dtype):
+        x = jax.random.normal(KEY, (m, k), dtype)
+        q, s = ops.quantize_rows_int8(x, interpret=True)
+        q_r, s_r = ref.quantize_rows_int8_ref(x)
+        assert (np.asarray(q) == np.asarray(q_r)).all()
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r),
+                                   rtol=1e-6, atol=0)
+
+    def test_padded_rows_do_not_leak(self):
+        """M padding inside the wrapper never changes real-row output."""
+        x = jax.random.normal(KEY, (5, 131), jnp.float32)
+        q, s = ops.quantize_rows_int8(x, interpret=True)
+        assert q.shape == (5, 131) and s.shape == (5, 1)
+        q_r, _ = ref.quantize_rows_int8_ref(x)
+        assert (np.asarray(q) == np.asarray(q_r)).all()
+
+
+class TestFusedEpilogue:
+    @pytest.mark.parametrize("m,k,n", RAGGED_SHAPES)
+    def test_dequant_parity_ragged(self, m, k, n):
+        k1, k2 = keys(2)
+        x = jax.random.normal(k1, (m, k), jnp.float32)
+        w = jax.random.normal(k2, (k, n), jnp.float32) * 0.1
+        w_q, w_s = ops.quantize_weights_int8(w)
+        out = ops.cim_quantized_matmul_fused(x, w_q, w_s, interpret=True)
+        expect = ref.fused_matmul_ref(x, w_q, w_s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("activation", [None, "gelu", "silu"])
+    @pytest.mark.parametrize("with_bias", [False, True])
+    def test_bias_activation_fused(self, activation, with_bias):
+        k1, k2, k3 = keys(3)
+        m, k, n = 48, 200, 300
+        x = jax.random.normal(k1, (m, k), jnp.float32)
+        w = jax.random.normal(k2, (k, n), jnp.float32) * 0.1
+        bias = jax.random.normal(k3, (n,), jnp.float32) * 0.1 \
+            if with_bias else None
+        w_q, w_s = ops.quantize_weights_int8(w)
+        out = ops.cim_quantized_matmul_fused(x, w_q, w_s, bias=bias,
+                                             activation=activation,
+                                             interpret=True)
+        expect = ref.fused_matmul_ref(x, w_q, w_s, bias=bias,
+                                      activation=activation)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("out_dtype,tol", [(jnp.float32, 1e-4),
+                                               (jnp.bfloat16, 2e-2)])
+    def test_out_dtypes(self, out_dtype, tol):
+        k1, k2 = keys(2)
+        x = jax.random.normal(k1, (32, 128), jnp.float32)
+        w = jax.random.normal(k2, (128, 256), jnp.float32) * 0.1
+        w_q, w_s = ops.quantize_weights_int8(w)
+        out = ops.cim_quantized_matmul_fused(x, w_q, w_s,
+                                             out_dtype=out_dtype,
+                                             interpret=True)
+        assert out.dtype == out_dtype
+        expect = ref.fused_matmul_ref(x, w_q, w_s)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_int32_accumulator_not_an_output(self):
+        """The fused call's HBM-resident outputs carry no int32 tensor."""
+        k1, k2 = keys(2)
+        x = jax.random.normal(k1, (32, 128), jnp.float32)
+        w_q, w_s = ops.quantize_weights_int8(
+            jax.random.normal(k2, (128, 256), jnp.float32))
+        shapes = jax.eval_shape(
+            lambda a: ops.cim_quantized_matmul_fused(a, w_q, w_s,
+                                                     interpret=True), x)
+        leaves = jax.tree.leaves(shapes)
+        assert all(s.dtype != jnp.int32 for s in leaves)
+
+
+class TestFusedGatedMLP:
+    @pytest.mark.parametrize("activation", ["gelu", "silu"])
+    @pytest.mark.parametrize("d,ff", [(96, 176), (128, 256)])
+    def test_gated_vs_ref(self, activation, d, ff):
+        k1, k2, k3, k4 = keys(4)
+        x = jax.random.normal(k1, (24, d), jnp.float32) * 0.5
+        uq, us = ops.quantize_weights_int8(
+            jax.random.normal(k2, (d, ff), jnp.float32) * 0.1)
+        gq, gs = ops.quantize_weights_int8(
+            jax.random.normal(k3, (d, ff), jnp.float32) * 0.1)
+        dq, ds = ops.quantize_weights_int8(
+            jax.random.normal(k4, (ff, d), jnp.float32) * 0.1)
+        out = ops.cim_quantized_mlp(x, uq, us, dq, ds, gate_q=gq,
+                                    gate_scale=gs, activation=activation,
+                                    interpret=True)
+        expect = ref.quantized_mlp_ref(
+            x, {"up": (uq, us), "gate": (gq, gs), "down": (dq, ds)},
+            activation)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_nongated_vs_ref(self):
+        k1, k2, k3 = keys(3)
+        d, ff = 96, 176
+        x = jax.random.normal(k1, (24, d), jnp.float32) * 0.5
+        uq, us = ops.quantize_weights_int8(
+            jax.random.normal(k2, (d, ff), jnp.float32) * 0.1)
+        dq, ds = ops.quantize_weights_int8(
+            jax.random.normal(k3, (ff, d), jnp.float32) * 0.1)
+        out = ops.cim_quantized_mlp(x, uq, us, dq, ds, activation="gelu",
+                                    interpret=True)
+        expect = ref.quantized_mlp_ref(x, {"up": (uq, us),
+                                           "down": (dq, ds)}, "gelu")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
