@@ -1,10 +1,12 @@
 # Developer entry points. The tier-1 gate is `make test` (everything);
 # `make test-fast` skips interpret-mode Pallas parity tests (marked
 # `slow` — they run the kernels through the CPU interpreter and
-# dominate suite wall-clock).
+# dominate suite wall-clock).  `make verify` is the pre-push check:
+# fast tests plus a BENCH smoke run (simulator rows only; merges into
+# BENCH_kernels.json without clobbering the kernel rows).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,3 +16,6 @@ test-fast:
 
 bench:
 	$(PY) -m benchmarks.run
+
+verify: test-fast
+	$(PY) -m benchmarks.run --skip-kernels

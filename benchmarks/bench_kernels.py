@@ -75,6 +75,7 @@ def bench_kernels():
         h = jax.nn.gelu(gate, approximate=True) * up
         return ops.cim_quantized_matmul(h, wd_q, wd_s)
 
+    @jax.jit
     def mlp_fused(a):
         return ops.cim_quantized_mlp(a, wu_q, wu_s, wd_q, wd_s,
                                      gate_q=wg_q, gate_scale=wg_s,
@@ -91,6 +92,91 @@ def bench_kernels():
     # row-quantize kernel on its own
     t_q = _time(ops.quantize_rows_int8, xm)
     rows.append(("kernel_quantize_rows", t_q, "dynamic row absmax int8"))
+
+    # ------------------------------------------------------------------
+    # Attention projections (QuantPlan attn_qkv + attn_out): three
+    # separate quantized GEMMs + XLA residual add vs ONE wide fused QKV
+    # dispatch + one out-proj dispatch with the residual in its epilogue.
+    # ------------------------------------------------------------------
+    from repro.quant import (quantize_attention, quantized_out_proj,
+                             quantized_qkv_proj)
+    from repro.models.layers import param_values
+    from repro.models.attention import attention_init
+
+    d, H, KH, Dh = 256, 4, 2, 64
+    aparams = param_values(attention_init(KEY, d, H, KH, Dh,
+                                          dtype=jnp.float32))
+    qattn = quantize_attention(aparams)
+    xq = jax.random.normal(k1, (128, d), jnp.float32) * 0.5
+    res = jax.random.normal(k4, (128, d), jnp.float32) * 0.5
+    wq_q, wq_s = ops.quantize_weights_int8(aparams["q"].reshape(d, -1))
+    wk_q, wk_s = ops.quantize_weights_int8(aparams["k"].reshape(d, -1))
+    wv_q, wv_s = ops.quantize_weights_int8(aparams["v"].reshape(d, -1))
+    wo_q, wo_s = ops.quantize_weights_int8(aparams["o"].reshape(-1, d))
+
+    @jax.jit
+    def attn_proj_unfused(a, r):
+        q = ops.cim_quantized_matmul(a, wq_q, wq_s)
+        k = ops.cim_quantized_matmul(a, wk_q, wk_s)
+        v = ops.cim_quantized_matmul(a, wv_q, wv_s)
+        o = ops.cim_quantized_matmul(q, wo_q, wo_s)  # stand-in attn out
+        del k, v
+        return r + o
+
+    @jax.jit
+    def attn_proj_fused(a, r):
+        wide = quantized_qkv_proj(qattn["qkv"], a, use_kernel=True)
+        q = wide[:, :H]
+        return quantized_out_proj(qattn["o"], q, residual=r,
+                                  use_kernel=True)
+
+    t_ap_unfused = _time(attn_proj_unfused, xq, res)
+    rows.append(("kernel_attn_proj_unfused", t_ap_unfused,
+                 "q/k/v/o as 4 int32-out GEMMs + XLA quant/dequant/add"))
+    t_ap_fused = _time(attn_proj_fused, xq, res)
+    rows.append(("kernel_attn_proj_fused", t_ap_fused,
+                 f"1 wide QKV dispatch + 1 out-proj w/ fused residual; "
+                 f"vs_unfused={t_ap_unfused/t_ap_fused:.2f}x"))
+
+    # ------------------------------------------------------------------
+    # Grouped MoE experts (QuantPlan moe_experts): per-expert int32-out
+    # GEMMs + XLA act/dequant vs the per-expert fused INT8 pipelines.
+    # ------------------------------------------------------------------
+    from repro.quant import quantize_moe_experts, quantized_moe_apply
+
+    E, dm, F, T = 4, 128, 256, 64
+    moe_params = {
+        "up": jax.random.normal(k2, (E, dm, F), jnp.float32) * 0.1,
+        "gate": jax.random.normal(k3, (E, dm, F), jnp.float32) * 0.1,
+        "down": jax.random.normal(k4, (E, F, dm), jnp.float32) * 0.1,
+    }
+    qmoe = quantize_moe_experts(moe_params)
+    xe = jax.random.normal(k1, (E, T, dm), jnp.float32) * 0.5
+    uq = [ops.quantize_weights_int8(moe_params["up"][e]) for e in range(E)]
+    gq = [ops.quantize_weights_int8(moe_params["gate"][e]) for e in range(E)]
+    dq = [ops.quantize_weights_int8(moe_params["down"][e]) for e in range(E)]
+
+    @jax.jit
+    def moe_unfused(a):
+        outs = []
+        for e in range(E):
+            up = ops.cim_quantized_matmul(a[e], *uq[e])
+            g = ops.cim_quantized_matmul(a[e], *gq[e])
+            h = jax.nn.silu(g) * up
+            outs.append(ops.cim_quantized_matmul(h, *dq[e]))
+        return jnp.stack(outs)
+
+    @jax.jit
+    def moe_fused(a):
+        return quantized_moe_apply(qmoe, a, "silu", use_kernel=True)
+
+    t_moe_unfused = _time(moe_unfused, xe)
+    rows.append(("kernel_moe_experts_unfused", t_moe_unfused,
+                 f"{E}x silu experts; 3 int32-out GEMMs + XLA act each"))
+    t_moe_fused = _time(moe_fused, xe)
+    rows.append(("kernel_moe_experts_fused", t_moe_fused,
+                 f"per-expert fused pipelines (3 dispatches each); "
+                 f"vs_unfused={t_moe_unfused/t_moe_fused:.2f}x"))
 
     # flash attention 2x256x4x32
     q = jax.random.normal(k1, (2, 256, 4, 32), jnp.float32)
@@ -128,16 +214,32 @@ def bench_kernels():
 
 
 def write_bench_json(rows, path: str = BENCH_JSON) -> None:
-    """Persist (name, us, derived) rows as the cross-PR perf trajectory."""
+    """Persist (name, us, derived) rows as the cross-PR perf trajectory.
+
+    Merges into an existing file instead of overwriting, so partial runs
+    (``--skip-kernels``, ``make verify``'s smoke pass, a single-module
+    run) update their rows without dropping everyone else's.  Each row
+    records the backend it was measured on (rows surviving from an
+    earlier run may predate the ``_meta`` header's run).
+    """
+    try:
+        with open(path) as f:
+            existing = json.load(f).get("benches", {})
+    except (FileNotFoundError, ValueError):
+        existing = {}
+    existing.update({name: {"us": round(us, 1), "derived": derived,
+                            "backend": jax.default_backend()}
+                     for name, us, derived in rows})
     payload = {
         "_meta": {
             "backend": jax.default_backend(),
             "jax": jax.__version__,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
-            "note": "CPU rows time the Pallas interpreter, not TPU perf",
+            "note": "cpu-backend rows time the Pallas interpreter, not "
+                    "TPU perf; rows merge across runs (last writer per "
+                    "row wins; per-row 'backend' is authoritative)",
         },
-        "benches": {name: {"us": round(us, 1), "derived": derived}
-                    for name, us, derived in rows},
+        "benches": existing,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -3,9 +3,11 @@
     PYTHONPATH=src python -m benchmarks.run [--skip-kernels] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows (derived holds the
-claim-relevant numbers, ours vs the paper's) and writes the same rows to
+claim-relevant numbers, ours vs the paper's) and **merges** the rows into
 ``BENCH_kernels.json`` (name -> µs + metadata) so the perf trajectory is
-machine-readable across PRs instead of only printed.
+machine-readable across PRs instead of only printed — a ``--skip-kernels``
+smoke run (``make verify``) updates the simulator rows without dropping
+the kernel rows.
 """
 from __future__ import annotations
 

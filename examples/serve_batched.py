@@ -3,9 +3,11 @@ small model with continuously-batched requests.
 
     PYTHONPATH=src python examples/serve_batched.py [--int8]
 
-``--int8`` serves in the paper's INT8 CIM mode: MLP weights quantized to
-int8 and every prefill/decode step running the fused quant -> GEMM ->
-dequant/act pipeline (Pallas kernels on TPU, their oracle on CPU).
+``--int8`` serves in the paper's INT8 CIM mode with the **full
+QuantPlan**: attention QKV/out-projections, dense MLPs, and MoE experts
+all run the fused quant -> GEMM -> dequant/act/residual pipeline
+(Pallas kernels on TPU, their oracle on CPU) — one decode step of a
+dense block is exactly 5 fused GEMM-pipeline dispatches.
 """
 import sys
 import time
@@ -15,6 +17,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models import build_model
+from repro.quant import QuantPlan
 from repro.serving import Request, ServingEngine
 
 
@@ -24,9 +27,11 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, n_slots=4, max_len=128,
-                           prefill_bucket=16, quantize_mlp=int8)
+                           prefill_bucket=16,
+                           quant_plan=QuantPlan.full() if int8 else None)
     if int8:
-        print("serving with int8-quantized MLPs (fused CIM pipeline)")
+        print("serving the full INT8 QuantPlan (fused CIM pipeline):")
+        print(QuantPlan.full().describe(model.groups))
 
     rng = np.random.default_rng(0)
     reqs = []

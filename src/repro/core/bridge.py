@@ -275,13 +275,60 @@ def _xlstm_ops(cfg: ModelConfig, batch: int, q_len: int, bits: int,
     ]
 
 
+def _plan_layer_coverage(mixer: str, ffn: str) -> dict:
+    """OpKind -> plan layer-kind map for ONE layer, derived from
+    ``repro.quant.plan.covered_kinds`` (the single source of truth) so
+    the simulator costs exactly what apply_plan quantizes: only
+    attn/attn_local mixers get quantized projections (MLA stays bf16),
+    and a MoE layer's shared expert (OpKind.FFN) follows
+    ``moe_experts`` with the routed experts.  Attention QK/SV (KV-cache
+    GEMVs), softmax, the router, and the LM head are not weight matmuls
+    the plan covers — they stay bf16."""
+    # local import: quant pulls the Pallas kernel modules, which the
+    # simulator core otherwise never needs (callers passing a QuantPlan
+    # have already imported repro.quant anyway)
+    from repro.quant.plan import covered_kinds
+
+    kinds = covered_kinds(mixer, ffn)
+    cov: dict = {}
+    if "attn_qkv" in kinds:
+        cov[OpKind.QKV] = "attn_qkv"
+    if "attn_out" in kinds:
+        cov[OpKind.PROJ] = "attn_out"
+    if "mlp" in kinds:
+        cov[OpKind.FFN] = "mlp"
+    if "moe_experts" in kinds:
+        cov[OpKind.MOE_FFN] = "moe_experts"
+        cov[OpKind.FFN] = "moe_experts"      # shared expert
+    return cov
+
+
+def _plan_op_bits(op, plan, coverage: dict):
+    """Covered weight matmuls run the INT8 CIM pipeline (8-bit MACs at
+    the paper's INT8 energy point); everything else stays bf16."""
+    if not isinstance(op, MatMulOp):
+        return op
+    kind = coverage.get(op.kind)
+    bits = 8 if (kind is not None and plan.covers(kind)) else 16
+    return op.scaled(act_bits=bits, weight_bits=bits)
+
+
 def graph_from_config(cfg: ModelConfig, batch: int, q_len: int,
-                      kv_len: int, bits: int = 8) -> Graph:
-    """Operator graph for one model step (q_len==1 -> decode)."""
+                      kv_len: int, bits: int = 8,
+                      quant_plan=None) -> Graph:
+    """Operator graph for one model step (q_len==1 -> decode).
+
+    ``quant_plan`` (a :class:`repro.quant.plan.QuantPlan`, duck-typed)
+    overrides ``bits`` per op: plan-covered weight matmuls execute at
+    INT8 (the fused CIM pipeline the kernels actually run), uncovered
+    ops at bf16 — so the simulator costs exactly the mixed-precision
+    execution the QuantPlan declares.
+    """
     stage = "decode" if q_len == 1 else "prefill"
     g = Graph(name=f"{cfg.name}-{stage}-b{batch}-kv{kv_len}", repeat=1)
     for i, (mixer, ffn) in enumerate(cfg.layer_specs()):
         name = f"L{i}.{mixer}"
+        start = len(g.ops)
         if mixer in ("attn", "attn_local"):
             g.extend(_attn_ops(cfg, batch, q_len, kv_len, bits, mixer, name))
         elif mixer == "mla":
@@ -294,8 +341,14 @@ def graph_from_config(cfg: ModelConfig, batch: int, q_len: int,
             g.extend(_ffn_ops(cfg, batch, q_len, bits, ffn, name))
         g.add(VectorOp(name=f"{name}.residual", kind=OpKind.ELEMENTWISE,
                        elems=batch * q_len * cfg.d_model * 2))
+        if quant_plan is not None:
+            cov = _plan_layer_coverage(mixer, ffn)
+            g.ops[start:] = [_plan_op_bits(op, quant_plan, cov)
+                             for op in g.ops[start:]]
     # head
     g.add(MatMulOp(name="lm_head", kind=OpKind.LM_HEAD, M=batch * q_len,
                    K=cfg.d_model, N=cfg.vocab, act_bits=bits,
                    weight_bits=bits, out_bits=16))
+    if quant_plan is not None:
+        g.ops[-1] = g.ops[-1].scaled(act_bits=16, weight_bits=16)
     return g

@@ -64,11 +64,19 @@ class EnergyModel:
         active_cycles: float,
         stall_cycles: float,
         weight_bytes: float,
+        mac_bits: int = 8,
     ) -> float:
         """Energy (J) consumed by all MXUs of ``tpu`` for one op.
 
         active_cycles: cycles any MXU is processing (fill/drain included).
         stall_cycles : cycles the op is alive but MXUs starved (memory).
+        mac_bits     : operand width of the MACs.  The calibrated
+            active-MAC energies are the paper's INT8 point (§IV-B
+            evaluates every workload at INT8); dynamic MAC energy scales
+            linearly with operand width (bit-serial input broadcast in
+            the CIM macro, flop/wire toggling in the digital array), so
+            a bf16 op (mac_bits=16) pays 2x the INT8 active energy.
+            QuantPlan-covered layers run at 8; uncovered layers at 16.
         """
         mxu = tpu.mxu
         units = tpu.total_mac_units
@@ -89,7 +97,7 @@ class EnergyModel:
         else:  # pragma: no cover - defensive
             raise TypeError(f"unknown MXU type {type(mxu)}")
 
-        dynamic = active_macs * e_mac
+        dynamic = active_macs * e_mac * (mac_bits / 8.0)
         idle = units * active_cycles * e_idle
         stalled = units * stall_cycles * e_idle * gating
         weights = weight_bytes * e_wr

@@ -161,7 +161,8 @@ def simulate_matmul(tpu: TPUConfig, op: MatMulOp,
 
     stall_cycles = max(0.0, (latency - compute_s)) * tpu.frequency
     mxu_e = em.mxu_energy(tpu, mxu.active_macs, mxu.cycles, stall_cycles,
-                          mxu.weight_bytes)
+                          mxu.weight_bytes,
+                          mac_bits=max(op.act_bits, op.weight_bits))
     mem_e = em.memory_energy(mapping.hbm_bytes, mapping.oci_bytes,
                              mapping.vmem_bytes)
     return OpCost(op=op, latency_s=latency, compute_s=compute_s, hbm_s=hbm_s,

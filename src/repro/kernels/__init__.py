@@ -9,29 +9,41 @@ weight-stationary GEMM (CIM-MXU mode), decode-GEMV attention, prefill
 flash attention, online softmax [27], and the SSD chunk scan for the
 SSM/hybrid assigned architectures.
 
-Fused INT8 epilogue pipeline
-----------------------------
+Fused INT8 epilogue pipeline (QuantPlan execution)
+--------------------------------------------------
 The paper's CIM-MXU quantizes activations in a *pre-processing unit*
 and rescales/activates in a *post-processing unit* inside the MXU
 pipeline — peripheral data movement, not the MACs, dominates CIM LLM
 inference cost, so nothing round-trips to HBM between those stages.
 The software mirror (cim_gemm.py):
 
-* ``quantize_rows_int8``      — pre-processing unit: dynamic row-absmax
+* ``quantize_rows_int8``       — pre-processing unit: dynamic row-absmax
   activation quantization as one Pallas kernel (was an XLA f32 pass);
-* ``cim_gemm_int8_fused``     — MXU + post-processing unit: the int32
+* ``cim_gemm_int8_fused``      — MXU + post-processing unit: the int32
   accumulator stays in VMEM scratch and the last K-step applies
-  dequant scales, optional bias, optional gelu/silu — with
+  dequant scales, optional bias, gelu/silu, and an optional fused
+  **residual** add (the transformer-block skip connection) — with
   ``quantize_out`` it re-quantizes the row block for the next GEMM;
-* ``cim_gated_gemm_int8``     — gated-MLP front half, ``act(gate)*up``
+* ``cim_gemm_int8_fused_qin``  — the same pipeline as ONE dispatch: the
+  row quantization happens inside the kernel (full-K blocks), so a
+  single weight-consuming GEMM (attention QKV / out-projection) never
+  emits or reads an intermediate tensor at all;
+* ``cim_gated_gemm_int8``      — gated-MLP front half, ``act(gate)*up``
   in the epilogue.
 
-Dispatch counts per gated MLP: previously 3 GEMM kernels + 5+ XLA
-quant/dequant/bias/activation ops with f32 (and int32) intermediates in
-HBM; now exactly 3 Pallas kernels (quantize, gated GEMM, down GEMM)
-with int8 tensors between them.  quant/linear.py exposes this as
-``quantized_mlp_apply(use_kernel=True)``; the serving engine's
-``quantize_mlp=True`` turns it on for the decode path.
+Which layers run this pipeline is declared by a ``QuantPlan``
+(repro.quant.plan): ``Model.quantize(params, plan)`` rewrites covered
+weights into QuantizedLinear leaves, and the layer applies dispatch on
+them uniformly.  With the full plan, one decode step of a dense
+attention+MLP block is exactly **5** Pallas dispatches — 1 wide QKV
+(q/k/v concatenated along the output axis, quantize-in-kernel), 1
+out-projection with the residual fused into its epilogue, and 3 for the
+gated MLP (quantize, gated GEMM, down GEMM w/ residual) — previously
+~6 bf16 einsums + 5+ XLA elementwise passes with every intermediate in
+HBM.  MoE experts run per-expert fused pipelines over their dispatched
+capacity buffers (``quantized_moe_apply``).  The serving engine's
+``quant_plan=`` turns it on for the decode path (``quantize_mlp=True``
+remains as a deprecated MLP-only shim).
 """
 from . import ops, ref
 

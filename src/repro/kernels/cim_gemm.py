@@ -29,9 +29,16 @@ mirror that structure one-for-one:
 ``cim_gemm_int8_fused``  (MXU + post-processing unit)
     INT8 GEMM whose int32 accumulator lives only in VMEM scratch; at the
     last K-step the epilogue applies ``acc * x_scale * w_scale`` (+ bias)
-    (+ gelu/silu/relu) and emits f32/bf16 — or, with ``quantize_out``,
+    (+ gelu/silu/relu) (+ ``residual`` — the transformer-block skip
+    connection) and emits f32/bf16 — or, with ``quantize_out``,
     re-quantizes the row block to int8 so the *next* GEMM can consume it
     directly.  The int32 accumulator is never an HBM-resident output.
+
+``cim_gemm_int8_fused_qin``  (pre- + post-processing unit in one)
+    The same pipeline as a single dispatch: the row-absmax quantization
+    runs in the kernel prologue (full-K blocks, guarded by
+    ``MAX_FUSED_QUANT_K``), so attention QKV/out-projections are ONE
+    kernel each — no int8 activation tensor ever exists in HBM.
 
 ``cim_gated_gemm_int8``  (fused gated MLP front half)
     Two weight-stationary GEMMs (gate and up projections) sharing one
@@ -68,6 +75,15 @@ CORE_N = 256
 # Above this many output columns the fused requant epilogue would hold
 # the whole row block in VMEM; fall back to a separate quantize kernel.
 MAX_FUSED_QUANT_N = 8192
+
+# Above this many input columns the quantize-in-kernel GEMM variant
+# (``cim_gemm_int8_fused_qin``) would hold a full f32 activation row
+# block in VMEM; fall back to a separate quantize dispatch.  At the
+# default block_m=256 a (256, 4096) f32 block is 4 MiB — double-buffered
+# that's half of a ~16 MiB VMEM before weights/outputs, so this is the
+# practical ceiling (like MAX_FUSED_QUANT_N, an interpret-mode guess
+# pending on-TPU validation).
+MAX_FUSED_QUANT_K = 4096
 
 
 def _fit(dim: int, block: int) -> int:
@@ -193,14 +209,17 @@ def quantize_rows_int8(x: jax.Array, block_m: int = 256,
 # Fused-epilogue INT8 GEMM (MXU + post-processing unit)
 # ---------------------------------------------------------------------------
 def _cim_gemm_fused_kernel(*refs, n_k_steps: int, activation: str | None,
-                           has_bias: bool, quantize_out: bool):
+                           has_bias: bool, has_residual: bool,
+                           quantize_out: bool):
+    x_ref, w_ref, xs_ref, ws_ref = refs[:4]
+    i = 4
+    b_ref = None
     if has_bias:
-        x_ref, w_ref, xs_ref, ws_ref, b_ref = refs[:5]
-        out_refs, acc_ref = refs[5:-1], refs[-1]
-    else:
-        x_ref, w_ref, xs_ref, ws_ref = refs[:4]
-        b_ref = None
-        out_refs, acc_ref = refs[4:-1], refs[-1]
+        b_ref, i = refs[i], i + 1
+    r_ref = None
+    if has_residual:
+        r_ref, i = refs[i], i + 1
+    out_refs, acc_ref = refs[i:-1], refs[-1]
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -219,6 +238,10 @@ def _cim_gemm_fused_kernel(*refs, n_k_steps: int, activation: str | None,
         if has_bias:
             out = out + b_ref[...]
         out = _apply_activation(out, activation)
+        if has_residual:
+            # Fused residual add (the VPU leg of the post-processing
+            # unit): the projection output never exists without it.
+            out = out + r_ref[...].astype(jnp.float32)
         if quantize_out:
             q, scale = _rowquant(out)
             out_refs[0][...] = q
@@ -232,24 +255,30 @@ def _cim_gemm_fused_kernel(*refs, n_k_steps: int, activation: str | None,
     "block_k", "interpret"))
 def cim_gemm_int8_fused(x: jax.Array, w: jax.Array, x_scale: jax.Array,
                         w_scale: jax.Array, bias: jax.Array | None = None,
+                        residual: jax.Array | None = None,
                         activation: str | None = None,
                         out_dtype=jnp.float32, quantize_out: bool = False,
                         block_m: int = 256, block_n: int = 2 * CORE_N,
                         block_k: int = 4 * CORE_K,
                         interpret: bool = False):
-    """INT8 GEMM with fused dequant/bias/activation epilogue.
+    """INT8 GEMM with fused dequant/bias/activation/residual epilogue.
 
     x [M, K] int8 @ w [K, N] int8, rescaled by ``x_scale [M, 1]`` and
     ``w_scale [1, N]`` at the last K-step -> [M, N] ``out_dtype``; or,
     with ``quantize_out``, -> (q int8 [M, N], scale f32 [M, 1]) ready for
-    the next GEMM.  Dims must be multiples of the block sizes (ops.py
-    pads); ``quantize_out`` forces a single N block.
+    the next GEMM.  ``residual [M, N]`` is added after the activation
+    (the transformer-block skip connection, fused so the projection
+    output never round-trips to HBM).  Dims must be multiples of the
+    block sizes (ops.py pads); ``quantize_out`` forces a single N block
+    and excludes ``residual``.
     """
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (K, K2)
     assert x_scale.shape == (M, 1), x_scale.shape
     assert w_scale.shape == (1, N), w_scale.shape
+    assert not (quantize_out and residual is not None), \
+        "residual epilogue is for the block output, not a requantized mid"
 
     block_m = _fit(M, block_m)
     block_k = _fit(K, block_k)
@@ -269,6 +298,11 @@ def cim_gemm_int8_fused(x: jax.Array, w: jax.Array, x_scale: jax.Array,
         assert bias.shape == (1, N), bias.shape
         in_specs.append(pl.BlockSpec((1, block_n), lambda m, n, k: (0, n)))
         operands.append(bias)
+    if residual is not None:
+        assert residual.shape == (M, N), (residual.shape, (M, N))
+        in_specs.append(
+            pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)))
+        operands.append(residual)
 
     if quantize_out:
         out_specs = [
@@ -286,12 +320,101 @@ def cim_gemm_int8_fused(x: jax.Array, w: jax.Array, x_scale: jax.Array,
     return pl.pallas_call(
         functools.partial(_cim_gemm_fused_kernel, n_k_steps=n_k_steps,
                           activation=activation, has_bias=bias is not None,
+                          has_residual=residual is not None,
                           quantize_out=quantize_out),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Quantize-in-kernel fused GEMM: pre-processing unit folded into the GEMM
+# ---------------------------------------------------------------------------
+def _cim_gemm_fused_qin_kernel(*refs, activation: str | None, has_bias: bool,
+                               has_residual: bool):
+    x_ref, w_ref, ws_ref = refs[:3]
+    i = 3
+    b_ref = None
+    if has_bias:
+        b_ref, i = refs[i], i + 1
+    r_ref = None
+    if has_residual:
+        r_ref, i = refs[i], i + 1
+    out_ref = refs[i]
+
+    # Pre-processing unit inlined: the full K extent sits in this block,
+    # so the row absmax is local and the int8 activations never exist
+    # outside the kernel.
+    x_q, x_s = _rowquant(x_ref[...].astype(jnp.float32))
+    acc = jax.lax.dot_general(x_q, w_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_s * ws_ref[...]
+    if has_bias:
+        out = out + b_ref[...]
+    out = _apply_activation(out, activation)
+    if has_residual:
+        out = out + r_ref[...].astype(jnp.float32)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "out_dtype", "block_m", "block_n", "interpret"))
+def cim_gemm_int8_fused_qin(x: jax.Array, w: jax.Array, w_scale: jax.Array,
+                            bias: jax.Array | None = None,
+                            residual: jax.Array | None = None,
+                            activation: str | None = None,
+                            out_dtype=jnp.float32, block_m: int = 256,
+                            block_n: int = 2 * CORE_N,
+                            interpret: bool = False) -> jax.Array:
+    """Fully fused quantized linear as **one** dispatch.
+
+    x [M, K] f32/bf16 is row-quantized *inside* the kernel (full-K
+    blocks; callers guard with ``MAX_FUSED_QUANT_K``), multiplied against
+    w [K, N] int8, and rescaled/biased/activated (+ optional residual)
+    before anything leaves VMEM — the software image of the paper's
+    pre-processing unit -> CIM macro -> post-processing unit pipeline
+    with no inter-stage HBM traffic at all.  Used for the attention
+    QKV and output projections, where a single weight matrix consumes
+    the activation stream (the gated-MLP front half keeps a separate
+    quantize dispatch: its two-accumulator kernel has no VMEM headroom
+    for the f32 activation block).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (K, K2)
+    assert w_scale.shape == (1, N), w_scale.shape
+
+    block_m = _fit(M, block_m)
+    block_n = _fit(N, block_n)
+    grid = (M // block_m, N // block_n)
+
+    in_specs = [
+        pl.BlockSpec((block_m, K), lambda m, n: (m, 0)),
+        pl.BlockSpec((K, block_n), lambda m, n: (0, n)),
+        pl.BlockSpec((1, block_n), lambda m, n: (0, n)),
+    ]
+    operands = [x, w, w_scale]
+    if bias is not None:
+        assert bias.shape == (1, N), bias.shape
+        in_specs.append(pl.BlockSpec((1, block_n), lambda m, n: (0, n)))
+        operands.append(bias)
+    if residual is not None:
+        assert residual.shape == (M, N), (residual.shape, (M, N))
+        in_specs.append(pl.BlockSpec((block_m, block_n), lambda m, n: (m, n)))
+        operands.append(residual)
+
+    return pl.pallas_call(
+        functools.partial(_cim_gemm_fused_qin_kernel, activation=activation,
+                          has_bias=bias is not None,
+                          has_residual=residual is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
     )(*operands)
 

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from . import ref as _ref
 from . import cim_gemm as _cg
 from .cim_gemm import (cim_gemm_int8, cim_gemm_int8_fused,
-                       cim_gated_gemm_int8, CORE_K, CORE_N,
-                       MAX_FUSED_QUANT_N)
+                       cim_gemm_int8_fused_qin, cim_gated_gemm_int8,
+                       CORE_K, CORE_N, MAX_FUSED_QUANT_K, MAX_FUSED_QUANT_N)
 from .decode_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .online_softmax import online_softmax as _softmax_kernel
@@ -100,6 +100,15 @@ def _pad_operands(x, w_q, w_scale, bias=None):
     return x_p, w_p, ws_p, b_p, M, K, N
 
 
+def _pad_residual(residual):
+    """Pad a [M, N] residual to the (256, CORE_N) output grid."""
+    if residual is None:
+        return None
+    r_p, _ = _pad_to(residual.astype(jnp.float32), 0, 256)
+    r_p, _ = _pad_to(r_p, 1, CORE_N)
+    return r_p
+
+
 def quantize_rows_int8(x: jax.Array,
                        interpret: bool | None = None) -> tuple[jax.Array,
                                                                jax.Array]:
@@ -120,21 +129,34 @@ def quantize_rows_int8(x: jax.Array,
 def cim_quantized_matmul_fused(x: jax.Array, w_q: jax.Array,
                                w_scale: jax.Array,
                                bias: jax.Array | None = None,
+                               residual: jax.Array | None = None,
                                activation: str | None = None,
                                out_dtype=jnp.float32,
                                interpret: bool | None = None) -> jax.Array:
-    """Fully fused quantized linear: one quantize kernel + one fused GEMM.
+    """Fully fused quantized linear — one Pallas dispatch when K fits.
 
-    x [M, K] bf16/f32; w_q [K, N] int8; w_scale [N]; optional bias [N]
-    and gelu/silu/relu epilogue -> [M, N] ``out_dtype``.  No XLA
-    dequant/bias/activation ops run between the kernels.
+    x [M, K] bf16/f32; w_q [K, N] int8; w_scale [N]; optional bias [N],
+    gelu/silu/relu epilogue, and residual [M, N] added after the
+    activation -> [M, N] ``out_dtype``.  When the padded K extent fits
+    the VMEM row budget (``MAX_FUSED_QUANT_K``) the activation quant
+    happens *inside* the GEMM kernel (one dispatch, the attention
+    QKV/out-proj path); wider K falls back to a separate quantize kernel
+    (two dispatches).  Either way no XLA dequant/bias/activation ops run
+    between kernels.
     """
     interpret = _on_cpu() if interpret is None else interpret
     x_p, w_p, ws_p, b_p, M, K, N = _pad_operands(x, w_q, w_scale, bias)
-    x_q, x_s = _cg.quantize_rows_int8(x_p, interpret=interpret)
-    out = cim_gemm_int8_fused(x_q, w_p, x_s, ws_p, bias=b_p,
-                              activation=activation, out_dtype=out_dtype,
-                              interpret=interpret)
+    r_p = _pad_residual(residual)
+    if x_p.shape[1] <= MAX_FUSED_QUANT_K:
+        out = cim_gemm_int8_fused_qin(x_p, w_p, ws_p, bias=b_p,
+                                      residual=r_p, activation=activation,
+                                      out_dtype=out_dtype,
+                                      interpret=interpret)
+    else:
+        x_q, x_s = _cg.quantize_rows_int8(x_p, interpret=interpret)
+        out = cim_gemm_int8_fused(x_q, w_p, x_s, ws_p, bias=b_p,
+                                  residual=r_p, activation=activation,
+                                  out_dtype=out_dtype, interpret=interpret)
     return out[:M, :N]
 
 
@@ -144,6 +166,7 @@ def cim_quantized_mlp(x: jax.Array, up_q: jax.Array, up_scale: jax.Array,
                       down_q: jax.Array, down_scale: jax.Array,
                       gate_q: jax.Array | None = None,
                       gate_scale: jax.Array | None = None,
+                      residual: jax.Array | None = None,
                       activation: str = "gelu", out_dtype=jnp.float32,
                       interpret: bool | None = None) -> jax.Array:
     """Fused INT8 MLP: quantize + (gated) up GEMM + down GEMM — 3 Pallas
@@ -153,6 +176,9 @@ def cim_quantized_mlp(x: jax.Array, up_q: jax.Array, up_scale: jax.Array,
     re-quantizes the hidden state to int8 (when d_ff fits the VMEM row
     budget), so the down GEMM consumes int8 directly; neither the int32
     accumulators nor the f32 hidden state round-trip through HBM.
+    ``residual [M, N]`` (the transformer-block skip connection) is added
+    in the down GEMM's epilogue, so the MLP output never exists as a
+    separate HBM tensor either.
 
     Weight padding short-circuits to a no-op when d_model/d_ff are
     already CORE_K/CORE_N-aligned (every real serving config); only
@@ -189,8 +215,9 @@ def cim_quantized_mlp(x: jax.Array, up_q: jax.Array, up_scale: jax.Array,
     # down's K dim must match the (256-padded) hidden width ff_p
     down_p, ds_p, _ = _pad_weight(
         jnp.pad(down_q, ((0, ff_p - d_ff), (0, 0))), down_scale)
-    out = cim_gemm_int8_fused(h_q, down_p, h_s, ds_p, out_dtype=out_dtype,
-                              interpret=interpret)
+    out = cim_gemm_int8_fused(h_q, down_p, h_s, ds_p,
+                              residual=_pad_residual(residual),
+                              out_dtype=out_dtype, interpret=interpret)
     return out[:M, :N]
 
 

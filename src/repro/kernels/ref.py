@@ -44,15 +44,20 @@ def _activate_ref(x: jax.Array, activation: str | None) -> jax.Array:
 
 def fused_matmul_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
                      bias: jax.Array | None = None,
+                     residual: jax.Array | None = None,
                      activation: str | None = None,
                      out_dtype=jnp.float32) -> jax.Array:
-    """Oracle for the fused epilogue: quant -> GEMM -> dequant/bias/act."""
+    """Oracle for the fused epilogue: quant -> GEMM -> dequant/bias/act
+    (+ fused residual add)."""
     x_q, x_scale = quantize_rows_int8_ref(x)
     out = cim_gemm_int8_ref(x_q, w_q).astype(jnp.float32)
     out = out * x_scale * w_scale[None, :]
     if bias is not None:
         out = out + bias[None, :]
-    return _activate_ref(out, activation).astype(out_dtype)
+    out = _activate_ref(out, activation)
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    return out.astype(out_dtype)
 
 
 def gated_mlp_hidden_ref(x: jax.Array, g_q: jax.Array, g_scale: jax.Array,
@@ -68,6 +73,7 @@ def gated_mlp_hidden_ref(x: jax.Array, g_q: jax.Array, g_scale: jax.Array,
 
 
 def quantized_mlp_ref(x: jax.Array, qtree: dict, activation: str,
+                      residual: jax.Array | None = None,
                       out_dtype=jnp.float32) -> jax.Array:
     """End-to-end oracle for the fused int8 MLP pipeline.
 
@@ -75,7 +81,8 @@ def quantized_mlp_ref(x: jax.Array, qtree: dict, activation: str,
     ``activation`` is a canonical kernel name ("gelu"|"silu"|"relu");
     quant/linear.py owns the geglu/swiglu alias mapping.  Mirrors the
     kernel pipeline exactly, including the int8 requant of the hidden
-    state between the two GEMMs.
+    state between the two GEMMs and the residual add fused into the
+    down GEMM's epilogue.
     """
     if "gate" in qtree:
         h = gated_mlp_hidden_ref(x, qtree["gate"][0], qtree["gate"][1],
@@ -86,6 +93,8 @@ def quantized_mlp_ref(x: jax.Array, qtree: dict, activation: str,
     h_q, h_scale = quantize_rows_int8_ref(h)
     out = cim_gemm_int8_ref(h_q, qtree["down"][0]).astype(jnp.float32)
     out = out * h_scale * qtree["down"][1][None, :]
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
     return out.astype(out_dtype)
 
 

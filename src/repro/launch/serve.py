@@ -25,6 +25,9 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--int8", action="store_true",
+                    help="serve the full INT8 QuantPlan (fused CIM "
+                         "pipeline for attn projections/MLPs/MoE experts)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -33,8 +36,14 @@ def main() -> None:
                          "use the token-backbone archs for this driver")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    plan = None
+    if args.int8:
+        from repro.quant import QuantPlan
+        plan = QuantPlan.full()
+        print(plan.describe(model.groups))
     engine = ServingEngine(model, params, n_slots=args.slots,
-                           max_len=args.max_len, prefill_bucket=16)
+                           max_len=args.max_len, prefill_bucket=16,
+                           quant_plan=plan)
 
     rng = np.random.default_rng(args.seed)
     reqs = []

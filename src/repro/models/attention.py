@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.context import shard
+from repro.quant.linear import (QuantizedLinear, quantized_out_proj,
+                                quantized_qkv_proj)
 from .layers import Param, apply_rope, linear_param, rmsnorm_apply, scale_param
 
 NEG_INF = -1e30
@@ -255,16 +257,25 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 # ---------------------------------------------------------------------------
 # Ring-buffer cache update
 # ---------------------------------------------------------------------------
-def _ring_update(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+def _ring_update(buf: jax.Array, new: jax.Array, idx: jax.Array,
+                 valid_len: Optional[jax.Array] = None) -> jax.Array:
     """Write ``new`` (S entries starting at logical position ``idx[b]`` per
     batch row) into a capacity-``cap`` ring buffer keyed by
     ``slot = position % cap``.  ``idx``: int32 [B] (per-slot indices for
     continuous batching).
 
+    ``valid_len`` (int32 [B], default S): number of *leading* valid
+    entries — bucket-padded prefill marks its pad suffix invalid so pads
+    never consume ring capacity.  When the write overflows the ring
+    (S >= cap) the survivors are the last ``cap`` VALID entries, not the
+    last ``cap`` positions — otherwise a masked pad suffix would evict
+    real in-window tokens from sliding-window caches.
+
     Alias-friendly fast paths (XLA can update donated buffers in place):
       * S == 1 (decode): one batched dynamic_update_slice at idx % cap.
-      * S >= cap (window-cache prefill): only the last ``cap`` entries
-        survive; a small per-row roll aligns them to their slots.
+      * S >= cap (window-cache prefill): a per-row dynamic slice of the
+        last ``cap`` valid entries; a small per-row roll aligns them to
+        their slots.
     The general wrapped case (chunked prefill continuation) falls back to
     a scatter.
     """
@@ -277,13 +288,27 @@ def _ring_update(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
             lambda b, n, s: jax.lax.dynamic_update_slice(b, n, (s, *zeros))
         )(buf, new, start)
     if S >= cap:
-        tail = new[:, -cap:]
-        # slot of the first tail element: (idx + S - cap) % cap
-        shift = ((idx + S - cap) % cap).astype(jnp.int32)
+        if valid_len is None:
+            s0 = jnp.full_like(idx, S - cap)
+        else:
+            # first surviving entry: last cap valid ones (clamped so a
+            # short valid prefix keeps its masked-pad tail in range)
+            s0 = jnp.clip(valid_len - cap, 0, S - cap).astype(jnp.int32)
+        tail = jax.vmap(
+            lambda t, s: jax.lax.dynamic_slice_in_dim(t, s, cap, 0)
+        )(new, s0)
+        # slot of the first tail element: (idx + s0) % cap
+        shift = ((idx + s0) % cap).astype(jnp.int32)
         return jax.vmap(lambda t, s: jnp.roll(t, s, axis=0))(tail, shift)
-    # general wrapped case (chunked prefill continuation): scatter
+    # general wrapped case (chunked prefill continuation): scatter;
+    # invalid (pad) entries are routed to the out-of-range slot ``cap``
+    # and dropped, preserving whatever the ring already holds there
     slots = (start[:, None] + jnp.arange(S)[None, :]) % cap     # [B, S]
-    return jax.vmap(lambda b, s, n: b.at[s].set(n))(buf, slots, new)
+    if valid_len is not None:
+        slots = jnp.where(jnp.arange(S)[None, :] < valid_len[:, None],
+                          slots, cap)
+    return jax.vmap(
+        lambda b, s, n: b.at[s].set(n, mode="drop"))(buf, slots, new)
 
 
 # ---------------------------------------------------------------------------
@@ -316,20 +341,42 @@ def attention_apply(
     rope_theta: float = 10000.0,
     cache: Optional[dict] = None,
     use_rope: bool = True,
+    residual: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, Optional[dict]]:
     """Self-attention over ``x`` [B, S, d].
 
     cache: {"k","v": [B, S_max, KH, D], "index": int32 scalar} — decode
     appends at ``index`` and attends over the valid prefix.  Returns
     (output [B, S, d], updated cache or None).
+
+    ``residual`` (the block input, pre-norm) is added to the output when
+    given; on the quantized path the add happens inside the
+    out-projection GEMM's epilogue (the paper's post-processing unit),
+    so the projection output never exists as a separate tensor.
+
+    QuantPlan-covered layers hold :class:`QuantizedLinear` leaves: a
+    fused ``"qkv"`` weight ([d, H+2*KH, Dh] int8 — all three projections
+    as ONE wide quantize-in-kernel GEMM dispatch, split along the head
+    axis after) and/or an ``"o"`` weight ([H, Dh, d] int8).
     """
     B, S, _ = x.shape
-    q = shard(jnp.einsum("bsd,dhk->bshk", x, params["q"]),
-              ("batch", "act_seq", "heads", None))
-    k = shard(jnp.einsum("bsd,dhk->bshk", x, params["k"]),
-              ("batch", "act_seq", "kv_heads", None))
-    v = shard(jnp.einsum("bsd,dhk->bshk", x, params["v"]),
-              ("batch", "act_seq", "kv_heads", None))
+    qkv_w = params.get("qkv")
+    if isinstance(qkv_w, QuantizedLinear):
+        o_w = params["o"]
+        H = (o_w.q if isinstance(o_w, QuantizedLinear) else o_w).shape[0]
+        KH = (qkv_w.q.shape[1] - H) // 2
+        wide = quantized_qkv_proj(qkv_w, x).astype(x.dtype)
+        q, k, v = jnp.split(wide, (H, H + KH), axis=2)
+        q = shard(q, ("batch", "act_seq", "heads", None))
+        k = shard(k, ("batch", "act_seq", "kv_heads", None))
+        v = shard(v, ("batch", "act_seq", "kv_heads", None))
+    else:
+        q = shard(jnp.einsum("bsd,dhk->bshk", x, params["q"]),
+                  ("batch", "act_seq", "heads", None))
+        k = shard(jnp.einsum("bsd,dhk->bshk", x, params["k"]),
+                  ("batch", "act_seq", "kv_heads", None))
+        v = shard(jnp.einsum("bsd,dhk->bshk", x, params["v"]),
+                  ("batch", "act_seq", "kv_heads", None))
     if "q_norm" in params:
         q = rmsnorm_apply(params["q_norm"], q)
         k = rmsnorm_apply(params["k_norm"], k)
@@ -343,22 +390,28 @@ def attention_apply(
         # layers size capacity == window, so entries are overwritten exactly
         # when they leave the window; per-slot true positions drive masking.
         idx = cache["index"]
+        # bucket-padded prefill marks pad positions with the empty
+        # sentinel; those entries must not consume ring capacity
+        valid_len = jnp.sum(positions < 2 ** 29, axis=1).astype(jnp.int32)
         quantized = cache["k"].dtype == jnp.int8
         if quantized:
             kq, ks = _quantize_kv(k)
             vq, vs = _quantize_kv(v)
-            ck = _ring_update(cache["k"], kq, idx)
-            cv = _ring_update(cache["v"], vq, idx)
-            cks = _ring_update(cache["k_scale"], ks, idx)
-            cvs = _ring_update(cache["v_scale"], vs, idx)
+            ck = _ring_update(cache["k"], kq, idx, valid_len)
+            cv = _ring_update(cache["v"], vq, idx, valid_len)
+            cks = _ring_update(cache["k_scale"], ks, idx, valid_len)
+            cvs = _ring_update(cache["v_scale"], vs, idx, valid_len)
             k_r = _dequantize_kv(ck, cks).astype(q.dtype)
             v_r = _dequantize_kv(cv, cvs).astype(q.dtype)
         else:
-            ck = _ring_update(cache["k"], k.astype(cache["k"].dtype), idx)
-            cv = _ring_update(cache["v"], v.astype(cache["v"].dtype), idx)
+            ck = _ring_update(cache["k"], k.astype(cache["k"].dtype), idx,
+                              valid_len)
+            cv = _ring_update(cache["v"], v.astype(cache["v"].dtype), idx,
+                              valid_len)
             k_r, v_r = ck, cv
         cpos = _ring_update(cache["pos"],
-                            positions.astype(cache["pos"].dtype), idx)
+                            positions.astype(cache["pos"].dtype), idx,
+                            valid_len)
         new_cache = {"k": ck, "v": cv, "pos": cpos, "index": idx + S}
         if quantized:
             new_cache["k_scale"] = cks
@@ -374,7 +427,15 @@ def attention_apply(
             out = blockwise_attention(q, k, v, positions, kv_pos, mask_kind,
                                       window, prefix_len)
 
-    o = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["o"])
+    o_w = params["o"]
+    if isinstance(o_w, QuantizedLinear):
+        # Out-projection on the fused pipeline; the residual rides in the
+        # GEMM epilogue instead of a separate XLA add.
+        o = quantized_out_proj(o_w, out, residual=residual).astype(x.dtype)
+    else:
+        o = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), o_w)
+        if residual is not None:
+            o = residual + o
     return o, new_cache
 
 

@@ -199,7 +199,11 @@ def mlp_is_quantized(params: dict) -> bool:
     return isinstance(params.get("up"), QuantizedLinear)
 
 
-def mlp_apply(params: dict, x: jax.Array, activation: str = "gelu") -> jax.Array:
+def mlp_apply(params: dict, x: jax.Array, activation: str = "gelu",
+              residual: jax.Array | None = None) -> jax.Array:
+    """Dense FFN.  ``residual`` (the block skip connection) is added to
+    the output when given; on the quantized path the add is fused into
+    the down-projection GEMM's epilogue."""
     from repro.parallel.context import shard  # local import: no cycle
     if mlp_is_quantized(params):
         # INT8 serving path: dispatches the fused Pallas pipeline (one
@@ -209,7 +213,8 @@ def mlp_apply(params: dict, x: jax.Array, activation: str = "gelu") -> jax.Array
         # this path assumes unsharded MLP weights (serving engine's
         # single-chip decode); TP'd fused kernels need shard_map.
         from repro.quant.linear import quantized_mlp_apply
-        return quantized_mlp_apply(params, x, activation, use_kernel=None)
+        return quantized_mlp_apply(params, x, activation, use_kernel=None,
+                                   residual=residual)
     hidden_axes = ("batch",) + (None,) * (x.ndim - 2) + ("mlp",)
     up = jnp.einsum("...d,df->...f", x, params["up"])
     if "gate" in params:
@@ -218,4 +223,5 @@ def mlp_apply(params: dict, x: jax.Array, activation: str = "gelu") -> jax.Array
     else:
         h = _activate(activation, up)
     h = shard(h, hidden_axes)
-    return jnp.einsum("...f,fd->...d", h, params["down"])
+    out = jnp.einsum("...f,fd->...d", h, params["down"])
+    return out if residual is None else residual + out

@@ -97,9 +97,14 @@ def block_apply(params: dict, spec: tuple[str, str], cfg: ModelConfig,
             kind, window = "sliding", cfg.sliding_window
         if cfg.frontend == "vision":
             kind = "prefix" if mixer == "attn" else kind
-        out, new_cache = attn_mod.attention_apply(
+        # The skip connection is handed to the layer: quantized
+        # out-projections fuse it into their GEMM epilogue, bf16 layers
+        # add it normally — block_apply stays agnostic of which leaves
+        # are QuantizedLinear.
+        x, new_cache = attn_mod.attention_apply(
             params["attn"], h, positions, mask_kind=kind, window=window,
-            prefix_len=prefix_len, rope_theta=cfg.rope_theta, cache=cache)
+            prefix_len=prefix_len, rope_theta=cfg.rope_theta, cache=cache,
+            residual=x)
     elif mixer == "mla":
         out, new_cache = mla_mod.mla_apply(
             params["mla"], h, positions, cfg.mla, rope_theta=cfg.rope_theta,
@@ -113,11 +118,12 @@ def block_apply(params: dict, spec: tuple[str, str], cfg: ModelConfig,
     elif mixer == "slstm":
         out, new_cache = xlstm_mod.slstm_block_apply(params["slstm"], h,
                                                      cfg.xlstm, cache=cache)
-    x = x + out
+    if mixer not in ("attn", "attn_local"):
+        x = x + out
 
     if ffn == "dense":
         h = norm_apply(cfg.norm, params["ffn_norm"], x)
-        x = x + mlp_apply(params["mlp"], h, cfg.activation)
+        x = mlp_apply(params["mlp"], h, cfg.activation, residual=x)
     elif ffn == "moe":
         h = norm_apply(cfg.norm, params["ffn_norm"], x)
         out, aux = moe_mod.moe_apply(params["moe"], h, cfg.moe, cfg.activation)
@@ -302,7 +308,7 @@ class Model:
 
     def forward(self, params, batch, caches=None, positions=None,
                 decode: bool = False, head: bool = True,
-                last_only: bool = False):
+                last_only: bool = False, last_index=None):
         cfg = self.cfg
         x, prefix_len = self._embed_inputs(params, batch)
         B, S = x.shape[:2]
@@ -313,6 +319,12 @@ class Model:
         x = norm_apply(cfg.norm, params["final_norm"], x)
         if last_only:
             x = x[:, -1:]
+        elif last_index is not None:
+            # per-row gather of one position (bucket-padded prefill: the
+            # last *real* token, not the last padded slot)
+            x = jax.vmap(
+                lambda xi, i: jax.lax.dynamic_slice_in_dim(xi, i, 1, 0)
+            )(x, last_index.astype(jnp.int32))
         if not head:
             return x, new_caches, aux
         logits = shard(self._head(params, x), ("batch", "act_seq", "vocab"))
@@ -388,6 +400,34 @@ class Model:
                                          last_only=True)
         return logits, caches
 
+    def prefill_padded(self, params, batch, caches, lengths):
+        """Prefill bucket-padded prompts without leaking pad tokens.
+
+        ``lengths`` (int32 [B]) are the true prompt lengths; positions at
+        or beyond them get the empty-slot sentinel (2**30), so the pad
+        entries written into the KV cache are masked exactly like empty
+        slots and generations never condition on them.  Returns logits at
+        each row's last *real* token ([B, 1, vocab]) and caches whose
+        write index is reset to the true length — the next decode token
+        lands at position ``length``, overwriting the first pad slot.
+        """
+        B = self._batch_size(batch)
+        S = self._step_len(batch)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        pos = jnp.where(pos < lengths[:, None], pos, 2 ** 30)
+        logits, caches, _ = self.forward(params, batch, caches=caches,
+                                         positions=pos,
+                                         last_index=lengths - 1)
+
+        def fix(path, a):
+            name = str(path[-1]) if path else ""
+            if "index" in name and hasattr(a, "dtype"):
+                return jnp.broadcast_to(lengths, a.shape).astype(a.dtype)
+            return a
+
+        caches = jax.tree_util.tree_map_with_path(fix, caches)
+        return logits, caches
+
     def decode_step(self, params, batch, caches):
         """One (or a few, for speculative verify) new tokens per sequence
         against existing caches."""
@@ -419,31 +459,35 @@ class Model:
         raise KeyError("no cache index found")
 
     # -- serving-side weight quantization ------------------------------------
-    def quantize_mlps(self, params):
-        """Swap every dense-FFN block's MLP weights for int8
-        :class:`~repro.quant.linear.QuantizedLinear` leaves (per layer of
-        each stacked group, via vmap).  ``mlp_apply`` detects the
-        quantized leaves and dispatches the fused INT8 Pallas pipeline
-        (one quantize + two fused GEMM kernels per gated MLP) — this is
-        the serving engine's decode path in INT8 mode."""
-        from repro.kernels import ops as kops
-        from repro.quant.linear import QuantizedLinear
+    def quantize(self, params, plan=None):
+        """Rewrite ``params`` per a :class:`~repro.quant.plan.QuantPlan`
+        (default: the full plan — every weight matmul on the fused INT8
+        CIM pipeline).
 
-        out = dict(params)
-        for gi, (spec, _count) in enumerate(self.groups):
-            _mixer, ffn = spec
-            if ffn != "dense":
-                continue
-            group = dict(out[f"group_{gi}"])
-            mlp = dict(group["mlp"])
-            for name in ("up", "gate", "down"):
-                if name in mlp:
-                    q, s = jax.vmap(kops.quantize_weights_int8)(
-                        mlp[name].astype(jnp.float32))
-                    mlp[name] = QuantizedLinear(q, s)
-            group["mlp"] = mlp
-            out[f"group_{gi}"] = group
-        return out
+        Covered layers become :class:`~repro.quant.linear.
+        QuantizedLinear` leaves, which the layer applies
+        (``attention_apply``, ``mlp_apply``, ``moe_apply``) detect and
+        dispatch uniformly: attention q/k/v as one wide fused GEMM,
+        out-projection and MLP down-projection with the block residual
+        in their epilogues, MoE experts as per-expert fused pipelines.
+        This is the serving engine's decode path in INT8 mode.
+        """
+        from repro.quant.plan import FULL_INT8, apply_plan
+        return apply_plan(self.groups, params,
+                          FULL_INT8 if plan is None else plan)
+
+    def quantize_mlps(self, params):
+        """Deprecated PR 1 entry point: MLP-only quantization.  Use
+        :meth:`quantize` with ``QuantPlan.mlp_only()`` (or the default
+        full plan) instead."""
+        import warnings
+
+        from repro.quant.plan import QuantPlan
+        warnings.warn(
+            "Model.quantize_mlps is deprecated; use "
+            "Model.quantize(params, QuantPlan.mlp_only())",
+            DeprecationWarning, stacklevel=2)
+        return self.quantize(params, QuantPlan.mlp_only())
 
     # -- caches ---------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int):

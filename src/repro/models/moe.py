@@ -123,15 +123,29 @@ def moe_apply(params: dict, x: jax.Array, cfg: MoEConfig,
         xe, se, pos_c, upd.astype(x.dtype))
     xe = shard(xe, ("batch", "expert", None, None))
 
-    # ---- batched expert FFN (einsum over expert axis; EP-shardable) ----
-    up = jnp.einsum("becd,edf->becf", xe, params["up"])
-    if "gate" in params:
-        g = jnp.einsum("becd,edf->becf", xe, params["gate"])
-        h = _activate(activation, g) * up
+    # ---- expert FFNs ----------------------------------------------------
+    from repro.quant.linear import (QuantizedLinear,  # local: no cycle
+                                    quantized_moe_apply)
+    if isinstance(params.get("up"), QuantizedLinear):
+        # QuantPlan moe_experts path: every expert's capacity buffer runs
+        # the fused INT8 pipeline (quantize + gated GEMM + down GEMM)
+        # against its own int8 weight tiles — the grouped-expert CIM
+        # mapping.  The hidden state lives inside the kernels, so the
+        # shard(h, "mlp") TP constraint has no tensor to attach to (same
+        # single-chip serving assumption as the quantized dense MLP).
+        xg = xe.transpose(1, 0, 2, 3).reshape(E, B * capacity, d)
+        ye = quantized_moe_apply(params, xg, activation, use_kernel=None)
+        ye = ye.reshape(E, B, capacity, d).transpose(1, 0, 2, 3)
     else:
-        h = _activate(activation, up)
-    h = shard(h, ("batch", "expert", None, "mlp"))
-    ye = jnp.einsum("becf,efd->becd", h, params["down"])
+        # batched expert GEMMs (einsum over expert axis; EP-shardable)
+        up = jnp.einsum("becd,edf->becf", xe, params["up"])
+        if "gate" in params:
+            g = jnp.einsum("becd,edf->becf", xe, params["gate"])
+            h = _activate(activation, g) * up
+        else:
+            h = _activate(activation, up)
+        h = shard(h, ("batch", "expert", None, "mlp"))
+        ye = jnp.einsum("becf,efd->becd", h, params["down"])
     ye = shard(ye, ("batch", "expert", None, None))
 
     # ---- gather + gate-weighted combine ---------------------------------

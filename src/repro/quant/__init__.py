@@ -1,5 +1,14 @@
-from .linear import (dequantize_tree, quantize_linear, quantize_mlp,
-                     quantized_matmul, quantized_mlp_apply, QuantizedLinear)
+from .linear import (dequantize_tree, kernel_mode, quantize_attention,
+                     quantize_linear, quantize_mlp, quantize_moe_experts,
+                     quantized_matmul, quantized_mlp_apply,
+                     quantized_moe_apply, quantized_out_proj,
+                     quantized_qkv_proj, QuantizedLinear)
+from .plan import FULL_INT8, LAYER_KINDS, QuantPlan, apply_plan, \
+    covered_kinds, plan_is_applied
 
-__all__ = ["QuantizedLinear", "quantize_linear", "quantize_mlp",
-           "quantized_matmul", "quantized_mlp_apply", "dequantize_tree"]
+__all__ = ["QuantizedLinear", "QuantPlan", "FULL_INT8", "LAYER_KINDS",
+           "apply_plan", "covered_kinds", "plan_is_applied", "kernel_mode",
+           "quantize_linear", "quantize_mlp", "quantize_attention",
+           "quantize_moe_experts", "quantized_matmul",
+           "quantized_mlp_apply", "quantized_moe_apply",
+           "quantized_qkv_proj", "quantized_out_proj", "dequantize_tree"]

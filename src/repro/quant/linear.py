@@ -11,17 +11,19 @@ rescale/bias/activation, dispatched to the **fused** Pallas pipeline
 (``kernels.ops.cim_quantized_matmul_fused`` / ``cim_quantized_mlp``)
 when ``use_kernel`` is set, or to the matching jnp oracle otherwise.
 
-With ``use_kernel=True`` a gated MLP is exactly one quantize kernel plus
-two fused GEMM kernels (gated front half with in-epilogue requant, then
-the down projection); no XLA dequant/bias/activation ops run between
-them and the int32 accumulators never leave VMEM.  ``use_kernel=None``
-auto-selects: fused kernels on TPU, the identical-math oracle on CPU.
+Which layers run this path is declared by a :class:`~repro.quant.plan.
+QuantPlan` (plan.py) covering the four logical layer kinds the CIM-MXU
+serves: dense-FFN MLPs, attention QKV (one wide fused GEMM), the
+attention out-projection (residual add fused into the epilogue), and
+MoE expert MLPs (per-expert fused pipelines over the dispatched
+tokens).  ``use_kernel=None`` auto-selects: fused kernels on TPU, the
+identical-math oracle on CPU (overridable with :func:`kernel_mode`).
 
-Used by the serving path for MLP blocks (the dominant decode weight
-traffic); validated against the bf16 reference in tests/test_quant.py.
+Validated against the bf16 references in tests/test_quant.py.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import NamedTuple
 
 import jax
@@ -32,14 +34,44 @@ from repro.kernels import ref as kref
 
 
 class QuantizedLinear(NamedTuple):
-    """Per-output-channel symmetric int8 weight."""
+    """Per-output-channel symmetric int8 weight.
 
-    q: jax.Array        # int8 [in, out]
+    ``q`` may carry extra structure axes (e.g. [in, heads, head_dim] for
+    the fused QKV projection, [heads, head_dim, out] for the attention
+    out-projection, [experts, in, out] for MoE experts); ``scale``
+    matches the output-channel axes.  Apply sites flatten to 2D.
+    """
+
+    q: jax.Array        # int8 [in, out] (or structured, see above)
     scale: jax.Array    # f32 [out]
+
+
+# ---------------------------------------------------------------------------
+# Kernel-dispatch resolution
+# ---------------------------------------------------------------------------
+_KERNEL_MODE: bool | None = None
+
+
+@contextlib.contextmanager
+def kernel_mode(force: bool | None):
+    """Force ``use_kernel=None`` call sites to the Pallas pipeline (True)
+    or the jnp oracle (False) for the enclosed scope — lets model-level
+    entry points (block_apply, the serving engine) be traced on the
+    kernel path from CPU tests without threading a flag through every
+    layer."""
+    global _KERNEL_MODE
+    prev = _KERNEL_MODE
+    _KERNEL_MODE = force
+    try:
+        yield
+    finally:
+        _KERNEL_MODE = prev
 
 
 def _resolve_use_kernel(use_kernel: bool | None) -> bool:
     if use_kernel is None:
+        if _KERNEL_MODE is not None:
+            return _KERNEL_MODE
         return jax.default_backend() != "cpu"
     return use_kernel
 
@@ -60,25 +92,32 @@ def quantize_linear(w: jax.Array) -> QuantizedLinear:
 def quantized_matmul(x: jax.Array, w: QuantizedLinear,
                      use_kernel: bool | None = False,
                      bias: jax.Array | None = None,
+                     residual: jax.Array | None = None,
                      activation: str | None = None) -> jax.Array:
-    """x [..., K] @ int8 W (+ bias, + activation) -> f32 [..., N].
+    """x [..., K] @ int8 W (+ bias, + activation, + residual) -> f32.
 
-    use_kernel=True dispatches the fused Pallas pipeline: a row-quantize
-    kernel plus one GEMM whose epilogue applies dequant/bias/activation
-    in VMEM (interpret mode on CPU — same integer math, slower); False
-    uses the jnp oracle (identical numerics, fast on CPU); None picks
-    the kernel exactly when running on a TPU backend.
+    use_kernel=True dispatches the fused Pallas pipeline — a single
+    GEMM dispatch with in-kernel activation quantization when K fits
+    the VMEM row budget, quantize + fused GEMM otherwise (interpret
+    mode on CPU — same integer math, slower); False uses the jnp oracle
+    (identical numerics, fast on CPU); None picks the kernel exactly
+    when running on a TPU backend (or per :func:`kernel_mode`).
+    ``residual [..., N]`` is added after the activation inside the
+    epilogue (the transformer-block skip connection).
     """
     use_kernel = _resolve_use_kernel(use_kernel)
     activation = _canon_activation(activation)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    r2 = None if residual is None else residual.reshape(-1,
+                                                        residual.shape[-1])
     if use_kernel:
         out = kops.cim_quantized_matmul_fused(x2, w.q, w.scale, bias=bias,
+                                              residual=r2,
                                               activation=activation)
     else:
         out = kref.fused_matmul_ref(x2, w.q, w.scale, bias=bias,
-                                    activation=activation)
+                                    residual=r2, activation=activation)
     return out.reshape(*lead, -1)
 
 
@@ -86,27 +125,33 @@ def quantized_matmul(x: jax.Array, w: QuantizedLinear,
 # MLP-block quantization (the dominant decode weight traffic)
 # ---------------------------------------------------------------------------
 def quantize_mlp(mlp_params: dict) -> dict:
-    """{'up','down'[,'gate']} bf16 -> QuantizedLinear tree."""
-    out = {k: quantize_linear(v) for k, v in mlp_params.items()
-           if k in ("up", "down", "gate")}
+    """{'up','down'[,'gate']} bf16 -> QuantizedLinear tree.  Idempotent:
+    already-quantized leaves pass through."""
+    out = {k: v if isinstance(v, QuantizedLinear) else quantize_linear(v)
+           for k, v in mlp_params.items() if k in ("up", "down", "gate")}
     return out
 
 
 def quantized_mlp_apply(qparams: dict, x: jax.Array, activation: str,
-                        use_kernel: bool | None = False) -> jax.Array:
+                        use_kernel: bool | None = False,
+                        residual: jax.Array | None = None) -> jax.Array:
     """Quantized MLP block on the fused INT8 pipeline.
 
     use_kernel=True: one quantize kernel + two fused GEMM kernels per
     gated MLP (the gated front half computes ``act(gate) * up`` and
     re-quantizes the hidden state in its epilogue; the down GEMM
-    consumes int8 directly).  Non-gated MLPs fuse the activation into
-    the up GEMM's epilogue instead.  use_kernel=False runs the jnp
-    oracle with identical numerics; None auto-selects by backend.
+    consumes int8 directly and adds ``residual`` — the block skip
+    connection — in its own epilogue).  Non-gated MLPs fuse the
+    activation into the up GEMM's epilogue instead.  use_kernel=False
+    runs the jnp oracle with identical numerics; None auto-selects by
+    backend.
     """
     use_kernel = _resolve_use_kernel(use_kernel)
     act = _canon_activation(activation)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    r2 = None if residual is None else residual.reshape(-1,
+                                                        residual.shape[-1])
     if use_kernel:
         gate = qparams.get("gate")
         out = kops.cim_quantized_mlp(
@@ -114,11 +159,109 @@ def quantized_mlp_apply(qparams: dict, x: jax.Array, activation: str,
             qparams["down"].q, qparams["down"].scale,
             gate_q=None if gate is None else gate.q,
             gate_scale=None if gate is None else gate.scale,
-            activation=act)
+            residual=r2, activation=act)
     else:
         qtree = {k: (v.q, v.scale) for k, v in qparams.items()}
-        out = kref.quantized_mlp_ref(x2, qtree, act)
+        out = kref.quantized_mlp_ref(x2, qtree, act, residual=r2)
     return out.reshape(*lead, -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention projections (fused QKV + out-projection w/ residual epilogue)
+# ---------------------------------------------------------------------------
+def quantize_attention(attn_params: dict, qkv: bool = True,
+                       out: bool = True) -> dict:
+    """Quantize one attention layer's projection weights.
+
+    ``q [d, H, Dh]``, ``k``/``v [d, KH, Dh]`` fuse into a single
+    ``"qkv"`` :class:`QuantizedLinear` with ``q`` int8 of shape
+    [d, H + 2*KH, Dh] (heads concatenated along the output axis — one
+    wide weight-stationary GEMM per step) and per-channel ``scale``
+    [H + 2*KH, Dh].  ``o [H, Dh, d]`` keeps its head structure in the
+    int8 tensor (scale [d]).  Norm/rope leaves pass through unchanged.
+    """
+    p = dict(attn_params)
+    if qkv and "q" in p and not isinstance(p.get("q"), QuantizedLinear):
+        wq, wk, wv = p.pop("q"), p.pop("k"), p.pop("v")
+        wide = jnp.concatenate([wq, wk, wv], axis=-2)   # [d, H+2KH, Dh]
+        d = wide.shape[0]
+        flat = quantize_linear(wide.reshape(d, -1))
+        p["qkv"] = QuantizedLinear(flat.q.reshape(wide.shape),
+                                   flat.scale.reshape(wide.shape[1:]))
+    if out and "o" in p and not isinstance(p.get("o"), QuantizedLinear):
+        wo = p["o"]                                     # [H, Dh, d]
+        flat = quantize_linear(wo.reshape(-1, wo.shape[-1]))
+        p["o"] = QuantizedLinear(flat.q.reshape(wo.shape), flat.scale)
+    return p
+
+
+def quantized_qkv_proj(qkv: QuantizedLinear, x: jax.Array,
+                       use_kernel: bool | None = None) -> jax.Array:
+    """One wide fused GEMM for all of q/k/v: x [..., d] -> [..., HK, Dh].
+
+    The concatenated output axis means a single quantize-in-kernel
+    dispatch feeds all three projections; callers split along the head
+    axis afterwards (free — no data movement).
+    """
+    d, HK, Dh = qkv.q.shape
+    flat = QuantizedLinear(qkv.q.reshape(d, HK * Dh),
+                           qkv.scale.reshape(HK * Dh))
+    wide = quantized_matmul(x, flat, use_kernel=use_kernel)
+    return wide.reshape(*x.shape[:-1], HK, Dh)
+
+
+def quantized_out_proj(o: QuantizedLinear, attn_out: jax.Array,
+                       residual: jax.Array | None = None,
+                       use_kernel: bool | None = None) -> jax.Array:
+    """Attention out-projection with the residual add fused into the
+    GEMM epilogue: attn_out [..., H, Dh] -> [..., d]."""
+    H, Dh, d = o.q.shape
+    flat = QuantizedLinear(o.q.reshape(H * Dh, d), o.scale)
+    x2 = attn_out.reshape(*attn_out.shape[:-2], H * Dh)
+    return quantized_matmul(x2, flat, use_kernel=use_kernel,
+                            residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# MoE expert MLPs (grouped per-expert fused pipelines)
+# ---------------------------------------------------------------------------
+def quantize_moe_experts(moe_params: dict) -> dict:
+    """Quantize one MoE layer: routed expert weights [E, K, N] become
+    per-expert QuantizedLinear stacks (q int8 [E, K, N], scale [E, N]);
+    the shared-expert MLP is quantized like a dense MLP.  The router
+    stays f32 (negligible FLOPs, routing decisions are
+    precision-sensitive)."""
+    out = dict(moe_params)
+    for name in ("up", "gate", "down"):
+        if name in out and not isinstance(out[name], QuantizedLinear):
+            q, s = jax.vmap(kops.quantize_weights_int8)(
+                out[name].astype(jnp.float32))
+            out[name] = QuantizedLinear(q, s)
+    if "shared" in out and not isinstance(out["shared"].get("up"),
+                                          QuantizedLinear):
+        out["shared"] = quantize_mlp(out["shared"])
+    return out
+
+
+def quantized_moe_apply(qparams: dict, x: jax.Array, activation: str,
+                        use_kernel: bool | None = False) -> jax.Array:
+    """Grouped-expert fused INT8 MLPs: x [E, T, d] -> [E, T, d].
+
+    Each expert's capacity buffer runs the same fused pipeline as a
+    dense MLP (quantize + gated GEMM + down GEMM) against its own int8
+    weights — the CIM mapping where every expert's weight tile sits in
+    its own macro sub-grid and the dispatched tokens stream through.
+    """
+    use_kernel = _resolve_use_kernel(use_kernel)
+    E = x.shape[0]
+    names = [k for k in ("up", "gate", "down") if k in qparams]
+    outs = []
+    for e in range(E):
+        qp = {k: QuantizedLinear(qparams[k].q[e], qparams[k].scale[e])
+              for k in names}
+        outs.append(quantized_mlp_apply(qp, x[e], activation,
+                                        use_kernel=use_kernel))
+    return jnp.stack(outs)
 
 
 def dequantize_tree(qtree: dict) -> dict:

@@ -1,0 +1,188 @@
+"""QuantPlan: a whole-model INT8 execution plan for the CIM pipeline.
+
+The paper's CIM-MXU serves *every* matmul in the transformer block —
+INT8 weights resident in the CIM macros, activations quantized by the
+pre-processing unit, rescale/activation (and the residual add) in the
+post-processing unit.  A :class:`QuantPlan` is the software declaration
+of that architecture: it walks the model's parameter tree and states,
+per logical layer kind, whether that layer executes on the fused INT8
+Pallas pipeline:
+
+    ``mlp``          dense-FFN up/gate/down     (quantize + 2 fused GEMMs)
+    ``attn_qkv``     q/k/v projections          (ONE wide fused GEMM,
+                                                 split after — quantize
+                                                 happens in-kernel)
+    ``attn_out``     attention out-projection   (one fused GEMM with the
+                                                 block residual added in
+                                                 its epilogue)
+    ``moe_experts``  routed expert MLPs (+ the shared expert)
+                                                (per-expert fused
+                                                 pipelines over the
+                                                 dispatched tokens)
+
+:func:`apply_plan` rewrites covered weights into
+:class:`~repro.quant.linear.QuantizedLinear` leaves; the model layers
+(``attention_apply``, ``mlp_apply``, ``moe_apply``) detect those leaves
+and dispatch the fused kernels uniformly — no per-callsite flags.  With
+the full plan, one decode step of a dense attention+MLP block is exactly
+5 Pallas dispatches (1 QKV, 1 out-proj w/ residual, 3 MLP) and the int32
+accumulators/int8 intermediates never surface in XLA.
+
+Entry points: ``Model.quantize(params, plan)`` and
+``ServingEngine(quant_plan=...)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from .linear import (QuantizedLinear, quantize_attention, quantize_mlp,
+                     quantize_moe_experts)
+
+LAYER_KINDS = ("mlp", "attn_qkv", "attn_out", "moe_experts")
+
+
+def covered_kinds(mixer: str, ffn: str) -> tuple[str, ...]:
+    """Which plan layer kinds apply to a (mixer, ffn) block spec.
+
+    The single source of truth for plan coverage: ``apply_plan`` (what
+    gets quantized), ``QuantPlan.layer_table`` (reporting), and the
+    simulator bridge (what gets costed at INT8) all derive from it.
+    MLA/SSM/xLSTM mixers are not covered — their projections stay bf16
+    until the kernels learn them (ROADMAP follow-up).
+    """
+    kinds: list[str] = []
+    if mixer in ("attn", "attn_local"):
+        kinds += ["attn_qkv", "attn_out"]
+    if ffn == "dense":
+        kinds += ["mlp"]
+    elif ffn == "moe":
+        # routed experts AND the shared expert ride on moe_experts
+        kinds += ["moe_experts"]
+    return tuple(kinds)
+
+
+@dataclass(frozen=True)
+class QuantPlan:
+    """Per-logical-layer-kind INT8 coverage declaration.
+
+    The default is the paper's configuration: everything on the CIM
+    pipeline.  Field order matches :data:`LAYER_KINDS`.
+    """
+
+    mlp: bool = True
+    attn_qkv: bool = True
+    attn_out: bool = True
+    moe_experts: bool = True
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def full(cls) -> "QuantPlan":
+        """Every weight matmul on the fused INT8 pipeline (paper §IV-B)."""
+        return cls()
+
+    @classmethod
+    def none(cls) -> "QuantPlan":
+        """bf16 everywhere (the baseline/digital configuration)."""
+        return cls(**{k: False for k in LAYER_KINDS})
+
+    @classmethod
+    def mlp_only(cls) -> "QuantPlan":
+        """PR 1 behaviour: only dense-FFN MLPs quantized (the
+        ``quantize_mlp=True`` deprecation shim maps here)."""
+        return cls(mlp=True, attn_qkv=False, attn_out=False,
+                   moe_experts=False)
+
+    # -- queries ---------------------------------------------------------
+    def covers(self, kind: str) -> bool:
+        if kind not in LAYER_KINDS:
+            raise ValueError(f"unknown layer kind {kind!r}; "
+                             f"options: {LAYER_KINDS}")
+        return bool(getattr(self, kind))
+
+    def layer_table(self, groups) -> list[dict]:
+        """Per-scan-group view of what the plan puts on the fused path.
+
+        ``groups``: ``Model.groups`` — [((mixer, ffn), count), ...].
+        Returns one row per group: which applicable layer kinds run the
+        fused INT8 pipeline there (empty list = bf16 group).
+        """
+        rows = []
+        for gi, (spec, count) in enumerate(groups):
+            mixer, ffn = spec
+            rows.append({
+                "group": gi, "mixer": mixer, "ffn": ffn, "layers": count,
+                "fused": [k for k in covered_kinds(mixer, ffn)
+                          if self.covers(k)],
+            })
+        return rows
+
+    def describe(self, groups) -> str:
+        """Human-readable plan summary (one line per scan group)."""
+        lines = []
+        for row in self.layer_table(groups):
+            fused = ",".join(row["fused"]) or "-"
+            lines.append(f"group_{row['group']} ({row['mixer']}+{row['ffn']}"
+                         f" x{row['layers']}): int8[{fused}]")
+        return "\n".join(lines)
+
+
+FULL_INT8 = QuantPlan.full()
+
+
+# ---------------------------------------------------------------------------
+# Param-tree rewrite
+# ---------------------------------------------------------------------------
+def apply_plan(groups, params, plan: QuantPlan):
+    """Rewrite a model's (stacked, scanned) param values tree so every
+    plan-covered layer holds QuantizedLinear leaves.
+
+    ``groups``: ``Model.groups``; ``params``: the value tree from
+    ``Model.init`` — each ``group_{i}`` entry holds leaves stacked over
+    the scan (layers) axis, so per-layer quantization vmaps over it.
+    Uncovered layers (and non-matmul leaves: norms, router, rope) pass
+    through untouched.  Idempotent: already-quantized leaves are kept.
+    """
+    out = dict(params)
+    for gi, (spec, _count) in enumerate(groups):
+        mixer, ffn = spec
+        kinds = [k for k in covered_kinds(mixer, ffn) if plan.covers(k)]
+        key = f"group_{gi}"
+        if key not in out or not kinds:
+            continue
+        group = dict(out[key])
+        if ({"attn_qkv", "attn_out"} & set(kinds)) and "attn" in group:
+            group["attn"] = jax.vmap(
+                lambda p: quantize_attention(p, qkv="attn_qkv" in kinds,
+                                             out="attn_out" in kinds)
+            )(group["attn"])
+        if "mlp" in kinds and "mlp" in group:
+            group["mlp"] = jax.vmap(quantize_mlp)(group["mlp"])
+        if "moe_experts" in kinds and "moe" in group:
+            group["moe"] = jax.vmap(quantize_moe_experts)(group["moe"])
+        out[key] = group
+    return out
+
+
+def plan_is_applied(groups, params, plan: QuantPlan) -> bool:
+    """True if every plan-covered layer already holds QuantizedLinear
+    leaves (used by tests and idempotence checks)."""
+    for gi, (spec, _count) in enumerate(groups):
+        mixer, ffn = spec
+        group = params.get(f"group_{gi}", {})
+        if mixer in ("attn", "attn_local") and "attn" in group:
+            attn = group["attn"]
+            if plan.attn_qkv and not isinstance(attn.get("qkv"),
+                                                QuantizedLinear):
+                return False
+            if plan.attn_out and not isinstance(attn.get("o"),
+                                                QuantizedLinear):
+                return False
+        if ffn == "dense" and plan.mlp and "mlp" in group:
+            if not isinstance(group["mlp"].get("up"), QuantizedLinear):
+                return False
+        if ffn == "moe" and plan.moe_experts and "moe" in group:
+            if not isinstance(group["moe"].get("up"), QuantizedLinear):
+                return False
+    return True

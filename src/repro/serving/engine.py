@@ -54,15 +54,27 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, model, params, n_slots: int = 4,
                  max_len: int = 512, prefill_bucket: int = 64,
-                 quantize_mlp: bool = False):
+                 quant_plan=None, quantize_mlp: bool = False):
         self.model = model
         if quantize_mlp:
-            # INT8 decode path (the paper's CIM serving mode): dense-FFN
-            # weights become int8 QuantizedLinear leaves and every
-            # prefill/decode step runs the fused quant->GEMM->dequant/
-            # act Pallas pipeline instead of bf16 einsums + XLA
-            # elementwise ops.
-            params = model.quantize_mlps(params)
+            # Deprecated PR 1 flag; maps to the MLP-only QuantPlan.
+            import warnings
+
+            from repro.quant import QuantPlan
+            warnings.warn(
+                "ServingEngine(quantize_mlp=True) is deprecated; pass "
+                "quant_plan=QuantPlan.mlp_only() (or QuantPlan.full())",
+                DeprecationWarning, stacklevel=2)
+            if quant_plan is None:
+                quant_plan = QuantPlan.mlp_only()
+        if quant_plan is not None:
+            # INT8 decode path (the paper's CIM serving mode): every
+            # plan-covered weight matmul — attention QKV/out-projection,
+            # dense-FFN MLPs, MoE experts — becomes int8 QuantizedLinear
+            # leaves, and every prefill/decode step runs the fused
+            # quant->GEMM->dequant/act/residual Pallas pipeline instead
+            # of bf16 einsums + XLA elementwise ops.
+            params = model.quantize(params, quant_plan)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
@@ -80,12 +92,20 @@ class ServingEngine:
         model = self.model
 
         @jax.jit
-        def prefill_one(params, cache, tokens, slot):
+        def prefill_one(params, cache, tokens, slot, length):
             """Prefill one request into slot ``slot`` of the batched cache.
 
             Cache leaves are stacked [layers, batch, ...]; a fresh
             single-slot view is prefetched, reset (zeros, empty position
             sentinel, index 0), prefilled with batch=1, and written back.
+
+            ``tokens`` is the bucket-padded prompt and ``length`` its true
+            length: pad positions are written with the empty-slot
+            sentinel (2**30) so the model never attends to them, the
+            returned logits are the last *real* token's, and the write
+            index resumes at ``length`` (decode overwrites the pad
+            slots).  Recurrent mixers (SSM/xLSTM) have no position-keyed
+            cache, so for them padding remains approximate.
             """
             def take(a):
                 return jax.lax.dynamic_slice_in_dim(a, slot, 1, 1)
@@ -93,8 +113,9 @@ class ServingEngine:
             sub = jax.tree.map(take, cache)
             sub = jax.tree.map(jnp.zeros_like, sub)
             sub = _set_pos_empty(sub)
-            logits, sub = model.prefill_last(
-                params, {"inputs": tokens[None]}, sub)
+            logits, sub = model.prefill_padded(
+                params, {"inputs": tokens[None]}, sub,
+                jnp.asarray([length], jnp.int32))
 
             def put(full, s):
                 return jax.lax.dynamic_update_slice_in_dim(
@@ -138,17 +159,19 @@ class ServingEngine:
             L = len(req.prompt)
             pad = (-L) % self.bucket
             # pad to the bucket by repeating the final token: keeps the
-            # prefill shape static (one jit trace per bucket count), at
-            # the cost of a few extra context tokens.
+            # prefill shape static (one jit trace per bucket count).  The
+            # pad region is masked inside prefill (empty-position
+            # sentinel), so generations are identical to an exact-length
+            # prefill and decode resumes at the true position L.
             toks = np.concatenate(
                 [req.prompt, np.full(pad, req.prompt[-1])]).astype(np.int32)
             logits, self.cache = self._prefill_one(
-                self.params, self.cache, jnp.asarray(toks), slot)
+                self.params, self.cache, jnp.asarray(toks), slot, L)
             self.stats.prefills += 1
             nxt = self._sample(req, np.asarray(logits), 0)
             req.generated.append(nxt)
             self.slot_req[slot] = req
-            self.slot_pos[slot] = L + pad
+            self.slot_pos[slot] = L
             self.slot_last[slot] = nxt
 
     def _active(self) -> list[int]:

@@ -24,6 +24,47 @@ class TestBridge:
         assert 0 < c_dec.latency_s < c_pre.latency_s
         assert c_dec.mxu_energy_j > 0
 
+    def test_quant_plan_bits_mirror_execution(self):
+        """graph_from_config(quant_plan=...) must cost exactly what
+        apply_plan quantizes: attn/attn_local projections INT8, MLA
+        bf16 (not covered by the kernels), MoE shared experts follow
+        ``moe_experts``, router/head/attention-GEMVs bf16."""
+        from repro.quant import QuantPlan
+        full = QuantPlan.full()
+
+        g = graph_from_config(get_config("gemma-2b"), 4, 1, 512,
+                              quant_plan=full)
+        by_kind = {}
+        for op in g.matmuls:
+            by_kind.setdefault(op.kind, set()).add(op.act_bits)
+        assert by_kind[OpKind.QKV] == {8}
+        assert by_kind[OpKind.PROJ] == {8}
+        assert by_kind[OpKind.FFN] == {8}
+        assert by_kind[OpKind.ATTN_QK] == {16}       # KV-cache GEMVs
+        assert by_kind[OpKind.LM_HEAD] == {16}
+
+        # MLA (deepseek) emits QKV/PROJ kinds but the kernels keep MLA
+        # in bf16 — the simulator must agree.
+        g = graph_from_config(get_config("deepseek-v3-671b"), 4, 1, 512,
+                              quant_plan=full)
+        assert {o.act_bits for o in g.matmuls
+                if o.kind in (OpKind.QKV, OpKind.PROJ)} == {16}
+        assert {o.act_bits for o in g.matmuls
+                if o.kind == OpKind.MOE_FFN} == {8}
+        assert {o.act_bits for o in g.matmuls if o.kind == OpKind.FFN
+                and "shared" in o.name} == {8}
+
+        # mlp_only leaves the MoE shared expert (moe_experts-covered,
+        # not mlp-covered) at bf16
+        g = graph_from_config(get_config("qwen2-moe-a2.7b"), 4, 1, 512,
+                              quant_plan=QuantPlan.mlp_only())
+        assert {o.act_bits for o in g.matmuls if o.kind == OpKind.FFN
+                and "shared" in o.name} == {16}
+
+        # no plan: the bits argument applies unchanged (default 8)
+        g = graph_from_config(get_config("gemma-2b"), 4, 1, 512)
+        assert {o.act_bits for o in g.matmuls} == {8}
+
     @pytest.mark.parametrize("arch", ARCH_IDS)
     def test_cim_never_catastrophically_worse(self, arch):
         """CIM decode should be within 2x of baseline for every family
