@@ -1,12 +1,15 @@
 # Developer entry points. The tier-1 gate is `make test` (everything);
 # `make test-fast` skips interpret-mode Pallas parity tests (marked
 # `slow` — they run the kernels through the CPU interpreter and
-# dominate suite wall-clock).  `make verify` is the pre-push check:
-# fast tests plus a BENCH smoke run (simulator rows only; merges into
-# BENCH_kernels.json without clobbering the kernel rows).
+# dominate suite wall-clock).  `make docs-check` import-checks every
+# python code block in README.md/docs/ so documentation can't rot.
+# `make verify` is the pre-push check: fast tests + docs-check plus a
+# BENCH smoke run (simulator rows only; merges into BENCH_kernels.json
+# without clobbering the kernel rows — a full `make bench` additionally
+# prunes rows for renamed/deleted benches).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench verify
+.PHONY: test test-fast bench verify docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,8 +17,11 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+docs-check:
+	$(PY) tools/check_docs.py
+
 bench:
 	$(PY) -m benchmarks.run
 
-verify: test-fast
+verify: test-fast docs-check
 	$(PY) -m benchmarks.run --skip-kernels

@@ -139,44 +139,41 @@ def bench_kernels():
                  f"vs_unfused={t_ap_unfused/t_ap_fused:.2f}x"))
 
     # ------------------------------------------------------------------
-    # Grouped MoE experts (QuantPlan moe_experts): per-expert int32-out
-    # GEMMs + XLA act/dequant vs the per-expert fused INT8 pipelines.
+    # Grouped MoE experts (QuantPlan moe_experts): the retired per-expert
+    # Python loop (3·E fused dispatches) vs the grouped kernels (3
+    # dispatches, expert index a grid dim — constant in E).  E=8 is the
+    # reduced-config scale; E=60 is qwen2-moe's real expert count, where
+    # the loop's dispatch overhead dominates.
     # ------------------------------------------------------------------
-    from repro.quant import quantize_moe_experts, quantized_moe_apply
+    from repro.quant import (quantize_moe_experts, quantized_moe_apply,
+                             quantized_moe_apply_looped)
 
-    E, dm, F, T = 4, 128, 256, 64
-    moe_params = {
-        "up": jax.random.normal(k2, (E, dm, F), jnp.float32) * 0.1,
-        "gate": jax.random.normal(k3, (E, dm, F), jnp.float32) * 0.1,
-        "down": jax.random.normal(k4, (E, F, dm), jnp.float32) * 0.1,
-    }
-    qmoe = quantize_moe_experts(moe_params)
-    xe = jax.random.normal(k1, (E, T, dm), jnp.float32) * 0.5
-    uq = [ops.quantize_weights_int8(moe_params["up"][e]) for e in range(E)]
-    gq = [ops.quantize_weights_int8(moe_params["gate"][e]) for e in range(E)]
-    dq = [ops.quantize_weights_int8(moe_params["down"][e]) for e in range(E)]
+    for E, T, reps in ((8, 64, 3), (60, 32, 1)):
+        dm, F = 64, 128
+        ke = jax.random.split(jax.random.PRNGKey(E), 4)
+        qmoe = quantize_moe_experts({
+            "up": jax.random.normal(ke[0], (E, dm, F), jnp.float32) * 0.1,
+            "gate": jax.random.normal(ke[1], (E, dm, F), jnp.float32) * 0.1,
+            "down": jax.random.normal(ke[2], (E, F, dm), jnp.float32) * 0.1,
+        })
+        xe = jax.random.normal(ke[3], (E, T, dm), jnp.float32) * 0.5
 
-    @jax.jit
-    def moe_unfused(a):
-        outs = []
-        for e in range(E):
-            up = ops.cim_quantized_matmul(a[e], *uq[e])
-            g = ops.cim_quantized_matmul(a[e], *gq[e])
-            h = jax.nn.silu(g) * up
-            outs.append(ops.cim_quantized_matmul(h, *dq[e]))
-        return jnp.stack(outs)
+        @jax.jit
+        def moe_looped(a, q=qmoe):
+            return quantized_moe_apply_looped(q, a, "silu", use_kernel=True)
 
-    @jax.jit
-    def moe_fused(a):
-        return quantized_moe_apply(qmoe, a, "silu", use_kernel=True)
+        @jax.jit
+        def moe_grouped(a, q=qmoe):
+            return quantized_moe_apply(q, a, "silu", use_kernel=True)
 
-    t_moe_unfused = _time(moe_unfused, xe)
-    rows.append(("kernel_moe_experts_unfused", t_moe_unfused,
-                 f"{E}x silu experts; 3 int32-out GEMMs + XLA act each"))
-    t_moe_fused = _time(moe_fused, xe)
-    rows.append(("kernel_moe_experts_fused", t_moe_fused,
-                 f"per-expert fused pipelines (3 dispatches each); "
-                 f"vs_unfused={t_moe_unfused/t_moe_fused:.2f}x"))
+        t_looped = _time(moe_looped, xe, reps=reps)
+        rows.append((f"kernel_grouped_moe_looped_e{E}", t_looped,
+                     f"{E} silu experts; per-expert loop = {3*E} Pallas "
+                     f"dispatches"))
+        t_grouped = _time(moe_grouped, xe, reps=reps)
+        rows.append((f"kernel_grouped_moe_fused_e{E}", t_grouped,
+                     f"grouped kernels, 3 dispatches (const in E); "
+                     f"vs_looped={t_looped/t_grouped:.2f}x"))
 
     # flash attention 2x256x4x32
     q = jax.random.normal(k1, (2, 256, 4, 32), jnp.float32)
@@ -213,20 +210,27 @@ def bench_kernels():
     return rows
 
 
-def write_bench_json(rows, path: str = BENCH_JSON) -> None:
+def write_bench_json(rows, path: str = BENCH_JSON,
+                     full_run: bool = False) -> None:
     """Persist (name, us, derived) rows as the cross-PR perf trajectory.
 
     Merges into an existing file instead of overwriting, so partial runs
     (``--skip-kernels``, ``make verify``'s smoke pass, a single-module
-    run) update their rows without dropping everyone else's.  Each row
-    records the backend it was measured on (rows surviving from an
-    earlier run may predate the ``_meta`` header's run).
+    run) update their rows without dropping everyone else's.  A
+    ``full_run`` (``benchmarks.run`` WITHOUT ``--skip-kernels`` — every
+    row family measured) instead prunes rows absent from this run, so
+    renamed/deleted benches don't survive as stale trajectory entries.
+    Each row records the backend it was measured on (merged-in rows may
+    predate the ``_meta`` header's run).
     """
-    try:
-        with open(path) as f:
-            existing = json.load(f).get("benches", {})
-    except (FileNotFoundError, ValueError):
+    if full_run:
         existing = {}
+    else:
+        try:
+            with open(path) as f:
+                existing = json.load(f).get("benches", {})
+        except (FileNotFoundError, ValueError):
+            existing = {}
     existing.update({name: {"us": round(us, 1), "derived": derived,
                             "backend": jax.default_backend()}
                      for name, us, derived in rows})
@@ -236,8 +240,9 @@ def write_bench_json(rows, path: str = BENCH_JSON) -> None:
             "jax": jax.__version__,
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
             "note": "cpu-backend rows time the Pallas interpreter, not "
-                    "TPU perf; rows merge across runs (last writer per "
-                    "row wins; per-row 'backend' is authoritative)",
+                    "TPU perf; rows merge across partial runs (last "
+                    "writer per row wins; per-row 'backend' is "
+                    "authoritative) and are pruned on full runs",
         },
         "benches": existing,
     }

@@ -7,7 +7,8 @@ claim-relevant numbers, ours vs the paper's) and **merges** the rows into
 ``BENCH_kernels.json`` (name -> µs + metadata) so the perf trajectory is
 machine-readable across PRs instead of only printed — a ``--skip-kernels``
 smoke run (``make verify``) updates the simulator rows without dropping
-the kernel rows.
+the kernel rows, while a full run (no flag) additionally prunes rows
+whose benches were renamed or deleted.
 """
 from __future__ import annotations
 
@@ -57,7 +58,9 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     out_path = args.json or BENCH_JSON
-    write_bench_json(rows, out_path)
+    # a run that measured every row family prunes stale (renamed/deleted)
+    # rows; --skip-kernels smoke runs keep merge-only behavior
+    write_bench_json(rows, out_path, full_run=not args.skip_kernels)
     print(f"# wrote {out_path}")
 
 

@@ -29,7 +29,11 @@ The software mirror (cim_gemm.py):
   single weight-consuming GEMM (attention QKV / out-projection) never
   emits or reads an intermediate tensor at all;
 * ``cim_gated_gemm_int8``      — gated-MLP front half, ``act(gate)*up``
-  in the epilogue.
+  in the epilogue;
+* ``cim_grouped_gemm_int8`` / ``cim_grouped_gated_gemm_int8`` — the same
+  fused pipelines batched over a leading **expert** grid dimension:
+  stacked ``[E, T, d]`` capacity buffers against stacked ``[E, K, N]``
+  int8 weights, one (expert, m, n) output tile per grid cell.
 
 Which layers run this pipeline is declared by a ``QuantPlan``
 (repro.quant.plan): ``Model.quantize(params, plan)`` rewrites covered
@@ -40,8 +44,17 @@ attention+MLP block is exactly **5** Pallas dispatches — 1 wide QKV
 out-projection with the residual fused into its epilogue, and 3 for the
 gated MLP (quantize, gated GEMM, down GEMM w/ residual) — previously
 ~6 bf16 einsums + 5+ XLA elementwise passes with every intermediate in
-HBM.  MoE experts run per-expert fused pipelines over their dispatched
-capacity buffers (``quantized_moe_apply``).  The serving engine's
+HBM.
+
+MoE expert compute is a **constant** number of dispatches independent of
+the expert count: ``quantized_moe_apply`` runs ONE row-quantize over the
+stacked capacity rows, ONE grouped gated GEMM, and ONE grouped down GEMM
+(``ops.cim_quantized_grouped_mlp``), with the expert index as a kernel
+grid dimension indexing the stacked weight/scale tensors.  A 60-expert
+qwen2-moe or 256-expert deepseek-v3 layer traces exactly the same three
+kernels as a 4-expert reduced config — the per-expert Python loop this
+replaced traced 3·E dispatches (kept as ``quantized_moe_apply_looped``;
+tests pin grouped == looped bit-for-bit).  The serving engine's
 ``quant_plan=`` turns it on for the decode path (``quantize_mlp=True``
 remains as a deprecated MLP-only shim).
 """

@@ -49,6 +49,16 @@ mirror that structure one-for-one:
     dispatches plus 5+ XLA quant/dequant/bias/activation ops with f32
     intermediates in HBM).
 
+``cim_grouped_gemm_int8`` / ``cim_grouped_gated_gemm_int8``  (grouped experts)
+    The fused pipelines batched over a leading **expert** grid dimension:
+    stacked activations ``[E, M, K]`` against stacked weights/scales
+    ``[E, K, N]`` / ``[E, 1, N]``, one output tile per (expert, m, n)
+    grid cell — the CIM mapping where every expert's weight tile sits in
+    its own macro sub-grid and the dispatched tokens stream through.  A
+    whole MoE layer's expert compute is a **constant** number of Pallas
+    dispatches (quantize + gated-grouped + down-grouped) independent of
+    E, instead of the 3·E dispatches a per-expert Python loop traces.
+
 ``cim_gemm_int8`` keeps the unfused int32-out path for parity tests and
 the fused-vs-unfused benchmark rows.
 
@@ -509,6 +519,232 @@ def cim_gated_gemm_int8(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
 
     return pl.pallas_call(
         functools.partial(_cim_gated_kernel, n_k_steps=n_k_steps,
+                          activation=activation, quantize_out=quantize_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32),
+                        pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, x_scale, gate_scale, up_scale)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-expert fused GEMMs: expert index as a grid dimension
+# ---------------------------------------------------------------------------
+def _grouped_specs(block_m: int, block_n: int, block_k: int):
+    """BlockSpecs for (x [E,M,K], w [E,K,N], x_scale [E,M,1],
+    w_scale [E,1,N]) with the expert index as the leading grid dim."""
+    return [
+        pl.BlockSpec((1, block_m, block_k), lambda e, m, n, k: (e, m, k)),
+        pl.BlockSpec((1, block_k, block_n), lambda e, m, n, k: (e, k, n)),
+        pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
+        pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)),
+    ]
+
+
+def _cim_grouped_gemm_kernel(*refs, n_k_steps: int, activation: str | None,
+                             has_bias: bool, quantize_out: bool):
+    """One (expert, block_m x block_n) output tile; K swept innermost."""
+    x_ref, w_ref, xs_ref, ws_ref = refs[:4]
+    i = 4
+    b_ref = None
+    if has_bias:
+        b_ref, i = refs[i], i + 1
+    out_refs, acc_ref = refs[i:-1], refs[-1]
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32) * xs_ref[0] * ws_ref[0]
+        if has_bias:
+            out = out + b_ref[0]
+        out = _apply_activation(out, activation)
+        if quantize_out:
+            q, scale = _rowquant(out)
+            out_refs[0][...] = q[None]
+            out_refs[1][...] = scale[None]
+        else:
+            out_refs[0][...] = out.astype(out_refs[0].dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "out_dtype", "quantize_out", "block_m", "block_n",
+    "block_k", "interpret"))
+def cim_grouped_gemm_int8(x: jax.Array, w: jax.Array, x_scale: jax.Array,
+                          w_scale: jax.Array, bias: jax.Array | None = None,
+                          activation: str | None = None,
+                          out_dtype=jnp.float32, quantize_out: bool = False,
+                          block_m: int = 256, block_n: int = 2 * CORE_N,
+                          block_k: int = 4 * CORE_K,
+                          interpret: bool = False):
+    """Grouped-expert fused INT8 GEMM — ONE dispatch for all E experts.
+
+    x [E, M, K] int8 @ w [E, K, N] int8, rescaled per expert by
+    ``x_scale [E, M, 1]`` and ``w_scale [E, 1, N]`` (+ optional
+    ``bias [E, 1, N]``, + gelu/silu/relu) at the last K-step ->
+    [E, M, N] ``out_dtype``; or, with ``quantize_out``, ->
+    (q int8 [E, M, N], scale f32 [E, M, 1]) ready for the next grouped
+    GEMM.  The expert index is the leading grid dimension, so the kernel
+    visits each expert's weight stack exactly like ``cim_gemm_int8_fused``
+    visits a single weight — weight-stationary within the (e, m, n) tile,
+    int32 accumulator in VMEM scratch, nothing intermediate in HBM.
+    Per-expert dims must be uniform (ops.py pads the stacked buffers);
+    ``quantize_out`` forces a single N block (cross-N row reduction).
+    """
+    E, M, K = x.shape
+    E2, K2, N = w.shape
+    assert E == E2 and K == K2, (x.shape, w.shape)
+    assert x_scale.shape == (E, M, 1), x_scale.shape
+    assert w_scale.shape == (E, 1, N), w_scale.shape
+
+    block_m = _fit(M, block_m)
+    block_k = _fit(K, block_k)
+    block_n = N if quantize_out else _fit(N, block_n)
+
+    n_k_steps = K // block_k
+    grid = (E, M // block_m, N // block_n, n_k_steps)
+
+    in_specs = _grouped_specs(block_m, block_n, block_k)
+    operands = [x, w, x_scale, w_scale]
+    if bias is not None:
+        assert bias.shape == (E, 1, N), bias.shape
+        in_specs.append(
+            pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)))
+        operands.append(bias)
+
+    if quantize_out:
+        out_specs = [
+            pl.BlockSpec((1, block_m, block_n),
+                         lambda e, m, n, k: (e, m, n)),
+            pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((E, M, N), jnp.int8),
+            jax.ShapeDtypeStruct((E, M, 1), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((1, block_m, block_n),
+                                 lambda e, m, n, k: (e, m, n))
+        out_shape = jax.ShapeDtypeStruct((E, M, N), out_dtype)
+
+    return pl.pallas_call(
+        functools.partial(_cim_grouped_gemm_kernel, n_k_steps=n_k_steps,
+                          activation=activation, has_bias=bias is not None,
+                          quantize_out=quantize_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+
+
+def _cim_grouped_gated_kernel(x_ref, wg_ref, wu_ref, xs_ref, gs_ref, us_ref,
+                              *refs, n_k_steps: int, activation: str,
+                              quantize_out: bool):
+    out_refs = refs[:-2]
+    acc_g_ref, acc_u_ref = refs[-2:]
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_g_ref[...] = jnp.zeros_like(acc_g_ref)
+        acc_u_ref[...] = jnp.zeros_like(acc_u_ref)
+
+    dims = (((1,), (0,)), ((), ()))
+    x = x_ref[0]
+    acc_g_ref[...] += jax.lax.dot_general(
+        x, wg_ref[0], dims, preferred_element_type=jnp.int32)
+    acc_u_ref[...] += jax.lax.dot_general(
+        x, wu_ref[0], dims, preferred_element_type=jnp.int32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _epilogue():
+        xs = xs_ref[0]
+        g = acc_g_ref[...].astype(jnp.float32) * xs * gs_ref[0]
+        u = acc_u_ref[...].astype(jnp.float32) * xs * us_ref[0]
+        h = _apply_activation(g, activation) * u
+        if quantize_out:
+            q, scale = _rowquant(h)
+            out_refs[0][...] = q[None]
+            out_refs[1][...] = scale[None]
+        else:
+            out_refs[0][...] = h.astype(out_refs[0].dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "out_dtype", "quantize_out", "block_m", "block_n",
+    "block_k", "interpret"))
+def cim_grouped_gated_gemm_int8(x: jax.Array, w_gate: jax.Array,
+                                w_up: jax.Array, x_scale: jax.Array,
+                                gate_scale: jax.Array, up_scale: jax.Array,
+                                activation: str = "gelu",
+                                out_dtype=jnp.float32,
+                                quantize_out: bool = False,
+                                block_m: int = 256, block_n: int = 2 * CORE_N,
+                                block_k: int = 4 * CORE_K,
+                                interpret: bool = False):
+    """Grouped-expert gated front half: ``act(x@Wg) * (x@Wu)`` for all E
+    experts in ONE dispatch.
+
+    x [E, M, K] int8 against stacked w_gate/w_up [E, K, N] int8 with
+    per-expert scales (``x_scale [E, M, 1]``, ``gate_scale``/``up_scale``
+    [E, 1, N]); both int32 accumulators live in VMEM scratch and the
+    gating product is formed in the epilogue.  With ``quantize_out`` the
+    hidden state is re-quantized in-epilogue, so the grouped down GEMM
+    consumes int8 directly — a full MoE expert layer is then exactly
+    three dispatches (quantize + this + grouped down) independent of E.
+    """
+    E, M, K = x.shape
+    E2, K2, N = w_gate.shape
+    assert E == E2 and K == K2 and w_up.shape == (E, K, N), \
+        (x.shape, w_gate.shape, w_up.shape)
+    assert x_scale.shape == (E, M, 1), x_scale.shape
+    assert gate_scale.shape == (E, 1, N) and up_scale.shape == (E, 1, N)
+
+    block_m = _fit(M, block_m)
+    block_k = _fit(K, block_k)
+    block_n = N if quantize_out else _fit(N, block_n)
+
+    n_k_steps = K // block_k
+    grid = (E, M // block_m, N // block_n, n_k_steps)
+
+    in_specs = [
+        pl.BlockSpec((1, block_m, block_k), lambda e, m, n, k: (e, m, k)),
+        pl.BlockSpec((1, block_k, block_n), lambda e, m, n, k: (e, k, n)),
+        pl.BlockSpec((1, block_k, block_n), lambda e, m, n, k: (e, k, n)),
+        pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
+        pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)),
+        pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)),
+    ]
+    if quantize_out:
+        out_specs = [
+            pl.BlockSpec((1, block_m, block_n),
+                         lambda e, m, n, k: (e, m, n)),
+            pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((E, M, N), jnp.int8),
+            jax.ShapeDtypeStruct((E, M, 1), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((1, block_m, block_n),
+                                 lambda e, m, n, k: (e, m, n))
+        out_shape = jax.ShapeDtypeStruct((E, M, N), out_dtype)
+
+    return pl.pallas_call(
+        functools.partial(_cim_grouped_gated_kernel, n_k_steps=n_k_steps,
                           activation=activation, quantize_out=quantize_out),
         grid=grid,
         in_specs=in_specs,

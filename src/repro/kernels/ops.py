@@ -16,6 +16,7 @@ from . import ref as _ref
 from . import cim_gemm as _cg
 from .cim_gemm import (cim_gemm_int8, cim_gemm_int8_fused,
                        cim_gemm_int8_fused_qin, cim_gated_gemm_int8,
+                       cim_grouped_gemm_int8, cim_grouped_gated_gemm_int8,
                        CORE_K, CORE_N, MAX_FUSED_QUANT_K, MAX_FUSED_QUANT_N)
 from .decode_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
@@ -219,6 +220,101 @@ def cim_quantized_mlp(x: jax.Array, up_q: jax.Array, up_scale: jax.Array,
                               residual=_pad_residual(residual),
                               out_dtype=out_dtype, interpret=interpret)
     return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Grouped-expert fused INT8 MLP pipeline (all experts per dispatch)
+# ---------------------------------------------------------------------------
+# Row alignment for the stacked per-expert capacity buffers: the int8
+# sublane tile (32) rather than the dense path's 256, because the pad is
+# paid E times over (E can be 60-256) and MoE capacities are small.
+GROUP_ROW_ALIGN = 32
+
+
+def _pad_grouped_acts(x):
+    """Pad stacked acts [E, T, d]: T -> 32-mult, d -> CORE_K-mult."""
+    x_p, _ = _pad_to(x, 1, GROUP_ROW_ALIGN)
+    x_p, _ = _pad_to(x_p, 2, CORE_K)
+    return x_p
+
+
+def _pad_grouped_weight(w_q, w_scale):
+    """Pad stacked int8 weights [E, K, N] + scales [E, N]: K -> CORE_K,
+    N -> CORE_N multiples; returns (w_p, scale [E, 1, N_p], N)."""
+    w_p, _ = _pad_to(w_q, 1, CORE_K)
+    w_p, N = _pad_to(w_p, 2, CORE_N)
+    ws_p, _ = _pad_to(w_scale[:, None, :], 2, CORE_N)
+    return w_p, ws_p, N
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "out_dtype",
+                                             "interpret"))
+def cim_quantized_grouped_mlp(x: jax.Array, up_q: jax.Array,
+                              up_scale: jax.Array, down_q: jax.Array,
+                              down_scale: jax.Array,
+                              gate_q: jax.Array | None = None,
+                              gate_scale: jax.Array | None = None,
+                              activation: str = "gelu",
+                              out_dtype=jnp.float32,
+                              interpret: bool | None = None) -> jax.Array:
+    """Fused INT8 MLPs for ALL E experts in a constant number of Pallas
+    dispatches: one quantize over the stacked capacity rows + one grouped
+    (gated) up GEMM + one grouped down GEMM — independent of E, where the
+    per-expert loop traced 3·E dispatches.
+
+    x [E, T, d] f32/bf16 (per-expert capacity buffers); up/gate weights
+    [E, d, F] int8 with scales [E, F]; down [E, F, d'] int8, scale
+    [E, d'] -> [E, T, d'] ``out_dtype``.  Identical per-row integer math
+    to running :func:`cim_quantized_mlp` per expert (bit-for-bit — the
+    parity is pinned in tests/test_quant.py): row quantization, int32
+    accumulation, and the dequant/act/requant epilogues are all
+    elementwise or exact, so grouping changes only the dispatch
+    structure, never the numbers.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    E, T, d = x.shape
+    d_ff = up_q.shape[2]
+    N = down_q.shape[2]
+
+    x_p = _pad_grouped_acts(x)
+    Tp, dp = x_p.shape[1:]
+    up_p, us_p, _ = _pad_grouped_weight(up_q, up_scale)
+    ff_p = up_p.shape[2]
+    fuse_requant = ff_p <= MAX_FUSED_QUANT_N
+
+    # ONE quantize dispatch over every expert's capacity rows
+    x_q, x_s = _cg.quantize_rows_int8(x_p.reshape(E * Tp, dp),
+                                      interpret=interpret)
+    x_q = x_q.reshape(E, Tp, dp)
+    x_s = x_s.reshape(E, Tp, 1)
+
+    if gate_q is not None:
+        g_p, gs_p, _ = _pad_grouped_weight(gate_q, gate_scale)
+        h = cim_grouped_gated_gemm_int8(x_q, g_p, up_p, x_s, gs_p, us_p,
+                                        activation=activation,
+                                        quantize_out=fuse_requant,
+                                        interpret=interpret)
+    else:
+        h = cim_grouped_gemm_int8(x_q, up_p, x_s, us_p,
+                                  activation=activation,
+                                  quantize_out=fuse_requant,
+                                  interpret=interpret)
+    if fuse_requant:
+        h_q, h_s = h
+    else:
+        # d_expert too wide for the in-epilogue row reduction: one extra
+        # quantize dispatch (still constant in E).
+        h_q, h_s = _cg.quantize_rows_int8(h.reshape(E * Tp, ff_p),
+                                          interpret=interpret)
+        h_q = h_q.reshape(E, Tp, ff_p)
+        h_s = h_s.reshape(E, Tp, 1)
+
+    # down's K dim must match the (CORE_N-padded) hidden width ff_p
+    down_p, ds_p, _ = _pad_grouped_weight(
+        jnp.pad(down_q, ((0, 0), (0, ff_p - d_ff), (0, 0))), down_scale)
+    out = cim_grouped_gemm_int8(h_q, down_p, h_s, ds_p, out_dtype=out_dtype,
+                                interpret=interpret)
+    return out[:, :T, :N]
 
 
 # ---------------------------------------------------------------------------

@@ -98,6 +98,22 @@ def quantized_mlp_ref(x: jax.Array, qtree: dict, activation: str,
     return out.astype(out_dtype)
 
 
+def grouped_quantized_mlp_ref(x: jax.Array, qtree: dict, activation: str,
+                              out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the grouped-expert fused int8 MLP pipeline.
+
+    x [E, T, d]; ``qtree`` holds stacked per-expert leaves:
+    {'up': (q [E, d, F], scale [E, F])[, 'gate': ...],
+     'down': (q [E, F, d'], scale [E, d'])}.  Exactly
+    :func:`quantized_mlp_ref` vmapped over the expert axis — the grouped
+    Pallas kernel must match this (and hence the per-expert loop)
+    bit-for-bit, since every step is elementwise or exact int32 math.
+    """
+    return jax.vmap(
+        lambda xe, qt: quantized_mlp_ref(xe, qt, activation,
+                                         out_dtype=out_dtype))(x, qtree)
+
+
 def flash_attention_ref(q, k, v, causal=True, window=None):
     """Dense attention oracle; q [B,S,H,D], k/v [B,S,KH,D]."""
     B, Sq, H, D = q.shape

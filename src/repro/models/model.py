@@ -469,8 +469,9 @@ class Model:
         (``attention_apply``, ``mlp_apply``, ``moe_apply``) detect and
         dispatch uniformly: attention q/k/v as one wide fused GEMM,
         out-projection and MLP down-projection with the block residual
-        in their epilogues, MoE experts as per-expert fused pipelines.
-        This is the serving engine's decode path in INT8 mode.
+        in their epilogues, MoE experts as ONE grouped pipeline over the
+        stacked capacity buffers (dispatches constant in the expert
+        count).  This is the serving engine's decode path in INT8 mode.
         """
         from repro.quant.plan import FULL_INT8, apply_plan
         return apply_plan(self.groups, params,

@@ -127,12 +127,16 @@ def moe_apply(params: dict, x: jax.Array, cfg: MoEConfig,
     from repro.quant.linear import (QuantizedLinear,  # local: no cycle
                                     quantized_moe_apply)
     if isinstance(params.get("up"), QuantizedLinear):
-        # QuantPlan moe_experts path: every expert's capacity buffer runs
-        # the fused INT8 pipeline (quantize + gated GEMM + down GEMM)
-        # against its own int8 weight tiles — the grouped-expert CIM
-        # mapping.  The hidden state lives inside the kernels, so the
-        # shard(h, "mlp") TP constraint has no tensor to attach to (same
-        # single-chip serving assumption as the quantized dense MLP).
+        # QuantPlan moe_experts path: ALL experts' capacity buffers run
+        # the fused INT8 pipeline in a constant number of Pallas
+        # dispatches (one quantize + one grouped gated GEMM + one
+        # grouped down GEMM), with the expert index as a kernel grid
+        # dimension over the stacked [E, B*C, d] buffer and the stacked
+        # int8 weight tiles — the grouped-expert CIM mapping, dispatch
+        # count independent of E.  The hidden state lives inside the
+        # kernels, so the shard(h, "mlp") TP constraint has no tensor to
+        # attach to (same single-chip serving assumption as the
+        # quantized dense MLP).
         xg = xe.transpose(1, 0, 2, 3).reshape(E, B * capacity, d)
         ye = quantized_moe_apply(params, xg, activation, use_kernel=None)
         ye = ye.reshape(E, B, capacity, d).transpose(1, 0, 2, 3)

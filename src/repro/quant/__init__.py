@@ -1,8 +1,9 @@
 from .linear import (dequantize_tree, kernel_mode, quantize_attention,
                      quantize_linear, quantize_mlp, quantize_moe_experts,
                      quantized_matmul, quantized_mlp_apply,
-                     quantized_moe_apply, quantized_out_proj,
-                     quantized_qkv_proj, QuantizedLinear)
+                     quantized_moe_apply, quantized_moe_apply_looped,
+                     quantized_out_proj, quantized_qkv_proj,
+                     QuantizedLinear)
 from .plan import FULL_INT8, LAYER_KINDS, QuantPlan, apply_plan, \
     covered_kinds, plan_is_applied
 
@@ -11,4 +12,5 @@ __all__ = ["QuantizedLinear", "QuantPlan", "FULL_INT8", "LAYER_KINDS",
            "quantize_linear", "quantize_mlp", "quantize_attention",
            "quantize_moe_experts", "quantized_matmul",
            "quantized_mlp_apply", "quantized_moe_apply",
-           "quantized_qkv_proj", "quantized_out_proj", "dequantize_tree"]
+           "quantized_moe_apply_looped", "quantized_qkv_proj",
+           "quantized_out_proj", "dequantize_tree"]

@@ -15,8 +15,9 @@ Which layers run this path is declared by a :class:`~repro.quant.plan.
 QuantPlan` (plan.py) covering the four logical layer kinds the CIM-MXU
 serves: dense-FFN MLPs, attention QKV (one wide fused GEMM), the
 attention out-projection (residual add fused into the epilogue), and
-MoE expert MLPs (per-expert fused pipelines over the dispatched
-tokens).  ``use_kernel=None`` auto-selects: fused kernels on TPU, the
+MoE expert MLPs (ONE grouped pipeline over the stacked per-expert
+capacity buffers — dispatch count independent of the expert count).
+``use_kernel=None`` auto-selects: fused kernels on TPU, the
 identical-math oracle on CPU (overridable with :func:`kernel_mode`).
 
 Validated against the bf16 references in tests/test_quant.py.
@@ -223,7 +224,7 @@ def quantized_out_proj(o: QuantizedLinear, attn_out: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# MoE expert MLPs (grouped per-expert fused pipelines)
+# MoE expert MLPs (grouped-expert fused pipeline, one kernel for all E)
 # ---------------------------------------------------------------------------
 def quantize_moe_experts(moe_params: dict) -> dict:
     """Quantize one MoE layer: routed expert weights [E, K, N] become
@@ -247,10 +248,46 @@ def quantized_moe_apply(qparams: dict, x: jax.Array, activation: str,
                         use_kernel: bool | None = False) -> jax.Array:
     """Grouped-expert fused INT8 MLPs: x [E, T, d] -> [E, T, d].
 
-    Each expert's capacity buffer runs the same fused pipeline as a
-    dense MLP (quantize + gated GEMM + down GEMM) against its own int8
-    weights — the CIM mapping where every expert's weight tile sits in
-    its own macro sub-grid and the dispatched tokens stream through.
+    ALL experts' capacity buffers run the fused pipeline in a **constant
+    number of Pallas dispatches** — one quantize over the stacked rows,
+    one grouped (gated) up GEMM, one grouped down GEMM — with the expert
+    index as a kernel grid dimension indexing the stacked int8
+    weight/scale tensors (``kernels.ops.cim_quantized_grouped_mlp``).
+    The CIM mapping: every expert's weight tile sits in its own macro
+    sub-grid and the dispatched tokens stream through simultaneously.
+    Dispatch count is independent of E (qwen2-moe's 60 or deepseek-v3's
+    256 experts cost the same trace as 4); the per-expert Python loop
+    this replaces traced 3·E kernels and is kept as
+    :func:`quantized_moe_apply_looped` for parity tests and benches.
+
+    use_kernel=False runs the bit-identical grouped jnp oracle; None
+    auto-selects by backend (or per :func:`kernel_mode`).
+    """
+    use_kernel = _resolve_use_kernel(use_kernel)
+    act = _canon_activation(activation)
+    gate = qparams.get("gate")
+    if use_kernel:
+        out = kops.cim_quantized_grouped_mlp(
+            x, qparams["up"].q, qparams["up"].scale,
+            qparams["down"].q, qparams["down"].scale,
+            gate_q=None if gate is None else gate.q,
+            gate_scale=None if gate is None else gate.scale,
+            activation=act)
+    else:
+        qtree = {k: (v.q, v.scale) for k, v in qparams.items()
+                 if k in ("up", "gate", "down")}
+        out = kref.grouped_quantized_mlp_ref(x, qtree, act)
+    return out.astype(x.dtype)
+
+
+def quantized_moe_apply_looped(qparams: dict, x: jax.Array, activation: str,
+                               use_kernel: bool | None = False) -> jax.Array:
+    """Per-expert loop over the fused dense-MLP pipeline (3·E dispatches).
+
+    The pre-grouped-kernel implementation, retained as the bit-for-bit
+    comparator for :func:`quantized_moe_apply` (tests pin grouped ==
+    looped exactly) and as the benchmark baseline that shows the
+    dispatch-count win.  Not used on any model path.
     """
     use_kernel = _resolve_use_kernel(use_kernel)
     E = x.shape[0]

@@ -16,17 +16,23 @@ Pallas pipeline:
                                                  block residual added in
                                                  its epilogue)
     ``moe_experts``  routed expert MLPs (+ the shared expert)
-                                                (per-expert fused
-                                                 pipelines over the
-                                                 dispatched tokens)
+                                                (ONE grouped pipeline over
+                                                 the stacked capacity
+                                                 buffers — dispatches
+                                                 constant in E)
 
 :func:`apply_plan` rewrites covered weights into
 :class:`~repro.quant.linear.QuantizedLinear` leaves; the model layers
 (``attention_apply``, ``mlp_apply``, ``moe_apply``) detect those leaves
 and dispatch the fused kernels uniformly — no per-callsite flags.  With
 the full plan, one decode step of a dense attention+MLP block is exactly
-5 Pallas dispatches (1 QKV, 1 out-proj w/ residual, 3 MLP) and the int32
-accumulators/int8 intermediates never surface in XLA.
+5 Pallas dispatches (1 QKV, 1 out-proj w/ residual, 3 MLP); an MoE block
+adds a constant 3 for ALL routed experts (quantize + grouped gated GEMM
++ grouped down GEMM — the expert index is a kernel grid dimension, so
+60- or 256-expert layers trace the same kernels as 4-expert ones) plus 3
+for the shared-expert MLP.  The int32 accumulators/int8 intermediates
+never surface in XLA.  Both dispatch invariants are structurally pinned
+in tests/test_quant.py.
 
 Entry points: ``Model.quantize(params, plan)`` and
 ``ServingEngine(quant_plan=...)``.

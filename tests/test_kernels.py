@@ -203,6 +203,83 @@ class TestFusedGatedMLP:
 
 
 # ---------------------------------------------------------------------------
+# grouped-expert fused GEMMs (expert index as a grid dimension)
+# ---------------------------------------------------------------------------
+class TestGroupedGemm:
+    """cim_grouped_gemm_int8 == per-expert cim_gemm_int8_fused, exactly."""
+
+    def _stacked(self, E, m, k, n, seed=0):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.randint(k1, (E, m, k), -127, 128, jnp.int8)
+        xs = jnp.abs(jax.random.normal(k2, (E, m, 1), jnp.float32)) + 0.01
+        w = jax.random.randint(k3, (E, k, n), -127, 128, jnp.int8)
+        ws = jnp.abs(jax.random.normal(k2, (E, 1, n), jnp.float32)) * 0.01
+        return x, xs, w, ws
+
+    @pytest.mark.parametrize("activation", [None, "gelu", "silu"])
+    def test_matches_per_expert_fused(self, activation):
+        from repro.kernels.cim_gemm import (cim_gemm_int8_fused,
+                                            cim_grouped_gemm_int8)
+        E, m, k, n = 3, 32, 128, 256
+        x, xs, w, ws = self._stacked(E, m, k, n)
+        grouped = cim_grouped_gemm_int8(x, w, xs, ws, activation=activation,
+                                        interpret=True)
+        for e in range(E):
+            one = cim_gemm_int8_fused(x[e], w[e], xs[e], ws[e],
+                                      activation=activation, interpret=True)
+            assert (np.asarray(grouped[e]) == np.asarray(one)).all()
+
+    def test_quantize_out_matches_per_expert(self):
+        from repro.kernels.cim_gemm import (cim_gemm_int8_fused,
+                                            cim_grouped_gemm_int8)
+        E, m, k, n = 3, 32, 128, 256
+        x, xs, w, ws = self._stacked(E, m, k, n, seed=1)
+        gq, gs = cim_grouped_gemm_int8(x, w, xs, ws, activation="gelu",
+                                       quantize_out=True, interpret=True)
+        for e in range(E):
+            oq, os_ = cim_gemm_int8_fused(x[e], w[e], xs[e], ws[e],
+                                          activation="gelu",
+                                          quantize_out=True, interpret=True)
+            assert (np.asarray(gq[e]) == np.asarray(oq)).all()
+            assert (np.asarray(gs[e]) == np.asarray(os_)).all()
+
+    def test_gated_matches_per_expert(self):
+        from repro.kernels.cim_gemm import (cim_gated_gemm_int8,
+                                            cim_grouped_gated_gemm_int8)
+        E, m, k, n = 2, 32, 128, 256
+        x, xs, wg, gs = self._stacked(E, m, k, n, seed=2)
+        _, _, wu, us = self._stacked(E, m, k, n, seed=3)
+        grouped = cim_grouped_gated_gemm_int8(x, wg, wu, xs, gs, us,
+                                              activation="silu",
+                                              interpret=True)
+        for e in range(E):
+            one = cim_gated_gemm_int8(x[e], wg[e], wu[e], xs[e], gs[e],
+                                      us[e], activation="silu",
+                                      interpret=True)
+            assert (np.asarray(grouped[e]) == np.asarray(one)).all()
+
+    @pytest.mark.parametrize("E,t,d,ff", [(2, 5, 36, 24),   # ragged all
+                                          (4, 32, 128, 256)])  # aligned
+    def test_grouped_mlp_wrapper_vs_ref(self, E, t, d, ff):
+        k1, k2, k3, k4 = keys(4)
+        x = jax.random.normal(k1, (E, t, d), jnp.float32) * 0.5
+        uq, us = jax.vmap(ops.quantize_weights_int8)(
+            jax.random.normal(k2, (E, d, ff), jnp.float32) * 0.1)
+        gq, gs = jax.vmap(ops.quantize_weights_int8)(
+            jax.random.normal(k3, (E, d, ff), jnp.float32) * 0.1)
+        dq, ds = jax.vmap(ops.quantize_weights_int8)(
+            jax.random.normal(k4, (E, ff, d), jnp.float32) * 0.1)
+        out = ops.cim_quantized_grouped_mlp(x, uq, us, dq, ds, gate_q=gq,
+                                            gate_scale=gs,
+                                            activation="silu",
+                                            interpret=True)
+        expect = ref.grouped_quantized_mlp_ref(
+            x, {"up": (uq, us), "gate": (gq, gs), "down": (dq, ds)}, "silu")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 class TestFlashAttention:

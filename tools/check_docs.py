@@ -1,0 +1,97 @@
+"""Doc-smoke checker: every ```python block in README.md and docs/ must
+be real code.
+
+    PYTHONPATH=src python tools/check_docs.py   (or: make docs-check)
+
+Two checks per fenced ``python`` block, doctest-style but cheap enough
+for every `make verify`:
+
+1. the block must *compile* (syntax errors in docs rot silently);
+2. every ``import``/``from`` statement in it must *execute* — so docs
+   can never reference a module, or a name inside one, that a refactor
+   renamed or deleted (``from repro.quant import QuantPlan`` fails the
+   check the moment ``QuantPlan`` disappears).
+
+Non-import statements are NOT executed: doc snippets may build models or
+serve requests, which is what examples/ and the test suite are for.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+DOC_FILES = ["README.md", "docs"]
+PY_FENCES = ("```python", "```py")
+
+
+def python_blocks(path: pathlib.Path):
+    """Yield (first_lineno, source) for each fenced python block."""
+    lines = path.read_text().splitlines()
+    block: list[str] | None = None
+    start = 0
+    for i, line in enumerate(lines, 1):
+        stripped = line.strip()
+        if block is None:
+            if any(stripped == f or stripped.startswith(f + " ")
+                   for f in PY_FENCES):
+                block, start = [], i + 1
+        elif stripped.startswith("```"):
+            yield start, "\n".join(block)
+            block = None
+        else:
+            block.append(line)
+    if block is not None:
+        # unterminated fence: still check it rather than silently skip
+        yield start, "\n".join(block)
+
+
+def check_block(where: str, src: str, failures: list[str]) -> None:
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        failures.append(f"{where}: syntax error: {e}")
+        return
+    for node in tree.body:
+        if not isinstance(node, (ast.Import, ast.ImportFrom)):
+            continue
+        stmt = ast.get_source_segment(src, node) or "<import>"
+        try:
+            exec(compile(ast.Module([node], []), where, "exec"), {})
+        except Exception as e:  # noqa: BLE001 — report every failure kind
+            failures.append(f"{where}: `{stmt}` failed: "
+                            f"{type(e).__name__}: {e}")
+
+
+def main() -> int:
+    md_files: list[pathlib.Path] = []
+    for entry in DOC_FILES:
+        p = REPO / entry
+        if p.is_dir():
+            md_files.extend(sorted(p.glob("**/*.md")))
+        elif p.exists():
+            md_files.append(p)
+
+    failures: list[str] = []
+    n_blocks = 0
+    for md in md_files:
+        for lineno, src in python_blocks(md):
+            n_blocks += 1
+            check_block(f"{md.relative_to(REPO)}:{lineno}", src, failures)
+
+    for f in failures:
+        print(f"FAIL {f}")
+    print(f"docs-check: {n_blocks} python block(s) in {len(md_files)} "
+          f"file(s), {len(failures)} failure(s)")
+    if not n_blocks:
+        print("FAIL docs-check: no python blocks found — README.md/docs/ "
+              "missing or fences renamed?")
+        return 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
