@@ -1,15 +1,19 @@
 # Developer entry points. The tier-1 gate is `make test` (everything);
 # `make test-fast` skips interpret-mode Pallas parity tests (marked
 # `slow` — they run the kernels through the CPU interpreter and
-# dominate suite wall-clock).  `make docs-check` import-checks every
-# python code block in README.md/docs/ so documentation can't rot.
-# `make verify` is the pre-push check: fast tests + docs-check plus a
-# BENCH smoke run (simulator rows only; merges into BENCH_kernels.json
-# without clobbering the kernel rows — a full `make bench` additionally
-# prunes rows for renamed/deleted benches).
+# dominate suite wall-clock).  `make test-tp` runs the tensor-parallel
+# suite under 8 forced host devices (its tests also subprocess their
+# own device counts, so it works from any environment).
+# `make docs-check` import-checks every python code block in
+# README.md/docs/ so documentation can't rot.
+# `make verify` is the pre-push check: fast tests + docs-check + the
+# multi-device TP suite plus a BENCH smoke run (simulator rows only;
+# merges into BENCH_kernels.json without clobbering the kernel rows —
+# a full `make bench` additionally prunes rows for renamed/deleted
+# benches).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench verify docs-check
+.PHONY: test test-fast test-tp bench verify docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,11 +21,15 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+test-tp:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -x -q tests/test_tp.py
+
 docs-check:
 	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) -m benchmarks.run
 
-verify: test-fast docs-check
+verify: test-fast docs-check test-tp
 	$(PY) -m benchmarks.run --skip-kernels

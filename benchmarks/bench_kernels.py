@@ -15,6 +15,10 @@ trajectory file.
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -175,6 +179,16 @@ def bench_kernels():
                      f"grouped kernels, 3 dispatches (const in E); "
                      f"vs_looped={t_looped/t_grouped:.2f}x"))
 
+    # ------------------------------------------------------------------
+    # Tensor-parallel fused MLP (QuantPlan mlp under a model-axis mesh):
+    # the shard_map pipeline at 1 vs 2 vs 4 shards.  Runs in a
+    # subprocess because the shard count needs forced host devices
+    # before jax initializes; on CPU the numbers time the interpreter +
+    # collectives, but the 1-shard row doubles as the shard_map-overhead
+    # baseline against kernel_gated_mlp_fused.
+    # ------------------------------------------------------------------
+    rows.extend(bench_tp_mlp())
+
     # flash attention 2x256x4x32
     q = jax.random.normal(k1, (2, 256, 4, 32), jnp.float32)
     kk = jax.random.normal(k2, (2, 256, 2, 32), jnp.float32)
@@ -208,6 +222,60 @@ def bench_kernels():
                  sm)
     rows.append(("kernel_online_softmax", t_sm, "512x4096 two-phase"))
     return rows
+
+
+def bench_tp_mlp():
+    """`tp_fused_mlp` rows: the tensor-parallel fused MLP pipeline at
+    1/2/4 shards (subprocess with 4 forced host devices; the parent
+    process has already initialized jax with its own device count)."""
+    code = textwrap.dedent("""
+        import json, time
+        import jax, jax.numpy as jnp
+        from repro.models.layers import param_values, mlp_init
+        from repro.parallel.context import sharding_context
+        from repro.quant import quantize_mlp, quantized_mlp_apply
+
+        d, ff = 256, 512
+        qp = quantize_mlp(param_values(mlp_init(
+            jax.random.PRNGKey(0), d, ff, "geglu", dtype=jnp.float32)))
+        x = jax.random.normal(jax.random.PRNGKey(1), (256, d),
+                              jnp.float32) * 0.5
+        out = {}
+        for p in (1, 2, 4):
+            mesh = jax.make_mesh((p,), ("model",))
+            f = jax.jit(lambda a: quantized_mlp_apply(
+                qp, a, "geglu", use_kernel=True))
+            with sharding_context(mesh):
+                jax.block_until_ready(f(x))       # compile
+                t0 = time.perf_counter()
+                for _ in range(3):
+                    r = f(x)
+                jax.block_until_ready(r)
+            out[p] = (time.perf_counter() - t0) / 3 * 1e6
+        print("TPROWS " + json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env.setdefault("PYTHONPATH", "src")
+    try:
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, timeout=540,
+                              env=env)
+        line = next(ln for ln in proc.stdout.splitlines()
+                    if ln.startswith("TPROWS "))
+        times = json.loads(line[len("TPROWS "):])
+    except Exception as e:                                  # noqa: BLE001
+        # No fake rows: report nothing rather than a 0.0 "measurement"
+        # (a full run will prune the stale tp rows, which is honest —
+        # they were not measured this run).
+        print(f"# tp_fused_mlp bench skipped: subprocess failed ({e})",
+              file=sys.stderr)
+        return []
+    t1 = times["1"]
+    return [(f"kernel_tp_fused_mlp_s{p}", times[str(p)],
+             f"geglu 256x256x512 shard_map {p}-way model mesh"
+             + ("" if p == 1 else f"; vs_1shard={t1/times[str(p)]:.2f}x"))
+            for p in (1, 2, 4)]
 
 
 def write_bench_json(rows, path: str = BENCH_JSON,

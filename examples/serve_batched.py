@@ -1,13 +1,18 @@
 """End-to-end serving driver (the paper is an inference paper): serve a
 small model with continuously-batched requests.
 
-    PYTHONPATH=src python examples/serve_batched.py [--int8]
+    PYTHONPATH=src python examples/serve_batched.py [--int8] [--tp N]
 
 ``--int8`` serves in the paper's INT8 CIM mode with the **full
 QuantPlan**: attention QKV/out-projections, dense MLPs, and MoE experts
 all run the fused quant -> GEMM -> dequant/act/residual pipeline
 (Pallas kernels on TPU, their oracle on CPU) — one decode step of a
 dense block is exactly 5 fused GEMM-pipeline dispatches.
+
+``--tp N`` serves the INT8 plan tensor-parallel on an N-way model mesh
+(shard_map'd per-device pipelines, weights device_put per shard; on CPU
+run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+Generations are bit-identical to the unsharded engine.
 """
 import sys
 import time
@@ -23,14 +28,33 @@ from repro.serving import Request, ServingEngine
 
 def main():
     int8 = "--int8" in sys.argv
+    tp = 0
+    if "--tp" in sys.argv:
+        try:
+            tp = int(sys.argv[sys.argv.index("--tp") + 1])
+        except (IndexError, ValueError):
+            raise SystemExit("--tp takes a shard count, e.g. --tp 2")
+    mesh = None
+    if tp:
+        if not int8:
+            raise SystemExit("--tp shards the fused INT8 pipeline; "
+                             "pass --int8 as well")
+        if jax.device_count() < tp:
+            raise SystemExit(
+                f"--tp {tp} needs {tp} devices but only "
+                f"{jax.device_count()} are visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={tp}")
+        mesh = jax.make_mesh((tp,), ("model",))
     cfg = reduced_config(get_config("gemma-2b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, n_slots=4, max_len=128,
                            prefill_bucket=16,
-                           quant_plan=QuantPlan.full() if int8 else None)
+                           quant_plan=QuantPlan.full() if int8 else None,
+                           mesh=mesh)
     if int8:
-        print("serving the full INT8 QuantPlan (fused CIM pipeline):")
+        print("serving the full INT8 QuantPlan (fused CIM pipeline"
+              + (f", {tp}-way tensor parallel" if tp else "") + "):")
         print(QuantPlan.full().describe(model.groups))
 
     rng = np.random.default_rng(0)

@@ -54,9 +54,19 @@ grid dimension indexing the stacked weight/scale tensors.  A 60-expert
 qwen2-moe or 256-expert deepseek-v3 layer traces exactly the same three
 kernels as a 4-expert reduced config — the per-expert Python loop this
 replaced traced 3·E dispatches (kept as ``quantized_moe_apply_looped``;
-tests pin grouped == looped bit-for-bit).  The serving engine's
-``quant_plan=`` turns it on for the decode path (``quantize_mlp=True``
-remains as a deprecated MLP-only shim).
+tests pin grouped == looped bit-for-bit).  The grouped kernels take an
+optional scalar-prefetched ``counts`` skip list: zero-capacity experts
+(no tokens routed this step) run no MXU dot products in their grid
+cells instead of streaming all-zero rows, bit-identically.  The serving
+engine's ``quant_plan=`` turns it on for the decode path
+(``quantize_mlp=True`` remains as a deprecated MLP-only shim).
+
+Tensor parallelism: under a model-axis sharding context the quantized
+apply sites shard_map these same kernels per device (repro.quant.tp) —
+column-parallel QKV/up/gate, row-parallel out-proj/down via
+``ops.cim_int8_gemm_acc`` partial accumulators psum'd before one
+epilogue, expert-parallel grouped MoE — bit-identical to the unsharded
+pipeline with per-shard dispatch counts unchanged.
 """
 from . import ops, ref
 

@@ -533,20 +533,62 @@ def cim_gated_gemm_int8(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
 # ---------------------------------------------------------------------------
 # Grouped-expert fused GEMMs: expert index as a grid dimension
 # ---------------------------------------------------------------------------
-def _grouped_specs(block_m: int, block_n: int, block_k: int):
+def _scalar_im(scalar: bool):
+    """Index-map adapter for scalar-prefetch grids: with ``scalar`` the
+    grouped kernels' index maps receive the trailing skip-list ref,
+    which plain (e, m, n, k) maps must ignore."""
+    def im(f):
+        return (lambda e, m, n, k, c: f(e, m, n, k)) if scalar else f
+    return im
+
+
+def _grouped_specs(block_m: int, block_n: int, block_k: int,
+                   scalar: bool = False):
     """BlockSpecs for (x [E,M,K], w [E,K,N], x_scale [E,M,1],
-    w_scale [E,1,N]) with the expert index as the leading grid dim."""
+    w_scale [E,1,N]) with the expert index as the leading grid dim.
+    ``scalar``: index maps take the trailing scalar-prefetch ref
+    (the per-expert skip list)."""
+    im = _scalar_im(scalar)
     return [
-        pl.BlockSpec((1, block_m, block_k), lambda e, m, n, k: (e, m, k)),
-        pl.BlockSpec((1, block_k, block_n), lambda e, m, n, k: (e, k, n)),
-        pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
-        pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)),
+        pl.BlockSpec((1, block_m, block_k), im(lambda e, m, n, k: (e, m, k))),
+        pl.BlockSpec((1, block_k, block_n), im(lambda e, m, n, k: (e, k, n))),
+        pl.BlockSpec((1, block_m, 1), im(lambda e, m, n, k: (e, m, 0))),
+        pl.BlockSpec((1, 1, block_n), im(lambda e, m, n, k: (e, 0, n))),
     ]
 
 
+def _grouped_call(kernel, grid, in_specs, out_specs, out_shape,
+                  scratch_shapes, operands, counts, interpret):
+    """Dispatch a grouped kernel, with the per-expert ``counts`` skip
+    list as a scalar-prefetch operand when given (empty experts skip
+    all MXU work in their grid cells)."""
+    if counts is None:
+        return pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
+                              out_specs=out_specs, out_shape=out_shape,
+                              scratch_shapes=scratch_shapes,
+                              interpret=interpret)(*operands)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=out_specs, scratch_shapes=scratch_shapes)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(counts.astype(jnp.int32),
+                                               *operands)
+
+
 def _cim_grouped_gemm_kernel(*refs, n_k_steps: int, activation: str | None,
-                             has_bias: bool, quantize_out: bool):
-    """One (expert, block_m x block_n) output tile; K swept innermost."""
+                             has_bias: bool, quantize_out: bool,
+                             has_counts: bool):
+    """One (expert, block_m x block_n) output tile; K swept innermost.
+
+    With ``has_counts`` the leading ref is the scalar-prefetch skip
+    list: experts whose capacity buffers received no tokens skip the
+    int8 dot products entirely (no MXU work).  The shared epilogue then
+    runs on the zero accumulator — exactly what the full pipeline
+    produces for all-zero rows (zero-row activations quantize to q=0),
+    so skipping is bit-identical, just cheaper.
+    """
+    if has_counts:
+        c_ref, refs = refs[0], refs[1:]
     x_ref, w_ref, xs_ref, ws_ref = refs[:4]
     i = 4
     b_ref = None
@@ -559,9 +601,15 @@ def _cim_grouped_gemm_kernel(*refs, n_k_steps: int, activation: str | None,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    def _accumulate():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    if has_counts:
+        pl.when(c_ref[pl.program_id(0)] > 0)(_accumulate)
+    else:
+        _accumulate()
 
     @pl.when(k_step == n_k_steps - 1)
     def _epilogue():
@@ -582,6 +630,7 @@ def _cim_grouped_gemm_kernel(*refs, n_k_steps: int, activation: str | None,
     "block_k", "interpret"))
 def cim_grouped_gemm_int8(x: jax.Array, w: jax.Array, x_scale: jax.Array,
                           w_scale: jax.Array, bias: jax.Array | None = None,
+                          counts: jax.Array | None = None,
                           activation: str | None = None,
                           out_dtype=jnp.float32, quantize_out: bool = False,
                           block_m: int = 256, block_n: int = 2 * CORE_N,
@@ -600,6 +649,11 @@ def cim_grouped_gemm_int8(x: jax.Array, w: jax.Array, x_scale: jax.Array,
     int32 accumulator in VMEM scratch, nothing intermediate in HBM.
     Per-expert dims must be uniform (ops.py pads the stacked buffers);
     ``quantize_out`` forces a single N block (cross-N row reduction).
+
+    ``counts`` (int32 [E], scalar-prefetched) is the zero-capacity skip
+    list: grid cells of experts with ``counts[e] == 0`` run no MXU dot
+    products (their all-zero capacity rows previously streamed through
+    the MXU anyway); outputs stay bit-identical.
     """
     E, M, K = x.shape
     E2, K2, N = w.shape
@@ -614,19 +668,21 @@ def cim_grouped_gemm_int8(x: jax.Array, w: jax.Array, x_scale: jax.Array,
     n_k_steps = K // block_k
     grid = (E, M // block_m, N // block_n, n_k_steps)
 
-    in_specs = _grouped_specs(block_m, block_n, block_k)
+    scalar = counts is not None
+    in_specs = _grouped_specs(block_m, block_n, block_k, scalar=scalar)
+    im = _scalar_im(scalar)
     operands = [x, w, x_scale, w_scale]
     if bias is not None:
         assert bias.shape == (E, 1, N), bias.shape
         in_specs.append(
-            pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)))
+            pl.BlockSpec((1, 1, block_n), im(lambda e, m, n, k: (e, 0, n))))
         operands.append(bias)
 
     if quantize_out:
         out_specs = [
             pl.BlockSpec((1, block_m, block_n),
-                         lambda e, m, n, k: (e, m, n)),
-            pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
+                         im(lambda e, m, n, k: (e, m, n))),
+            pl.BlockSpec((1, block_m, 1), im(lambda e, m, n, k: (e, m, 0))),
         ]
         out_shape = [
             jax.ShapeDtypeStruct((E, M, N), jnp.int8),
@@ -634,25 +690,24 @@ def cim_grouped_gemm_int8(x: jax.Array, w: jax.Array, x_scale: jax.Array,
         ]
     else:
         out_specs = pl.BlockSpec((1, block_m, block_n),
-                                 lambda e, m, n, k: (e, m, n))
+                                 im(lambda e, m, n, k: (e, m, n)))
         out_shape = jax.ShapeDtypeStruct((E, M, N), out_dtype)
 
-    return pl.pallas_call(
+    return _grouped_call(
         functools.partial(_cim_grouped_gemm_kernel, n_k_steps=n_k_steps,
                           activation=activation, has_bias=bias is not None,
-                          quantize_out=quantize_out),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        interpret=interpret,
-    )(*operands)
+                          quantize_out=quantize_out, has_counts=scalar),
+        grid, in_specs, out_specs, out_shape,
+        [pltpu.VMEM((block_m, block_n), jnp.int32)],
+        operands, counts, interpret)
 
 
-def _cim_grouped_gated_kernel(x_ref, wg_ref, wu_ref, xs_ref, gs_ref, us_ref,
-                              *refs, n_k_steps: int, activation: str,
-                              quantize_out: bool):
+def _cim_grouped_gated_kernel(*refs, n_k_steps: int, activation: str,
+                              quantize_out: bool, has_counts: bool):
+    if has_counts:
+        c_ref, refs = refs[0], refs[1:]
+    x_ref, wg_ref, wu_ref, xs_ref, gs_ref, us_ref = refs[:6]
+    refs = refs[6:]
     out_refs = refs[:-2]
     acc_g_ref, acc_u_ref = refs[-2:]
     k_step = pl.program_id(3)
@@ -662,12 +717,21 @@ def _cim_grouped_gated_kernel(x_ref, wg_ref, wu_ref, xs_ref, gs_ref, us_ref,
         acc_g_ref[...] = jnp.zeros_like(acc_g_ref)
         acc_u_ref[...] = jnp.zeros_like(acc_u_ref)
 
-    dims = (((1,), (0,)), ((), ()))
-    x = x_ref[0]
-    acc_g_ref[...] += jax.lax.dot_general(
-        x, wg_ref[0], dims, preferred_element_type=jnp.int32)
-    acc_u_ref[...] += jax.lax.dot_general(
-        x, wu_ref[0], dims, preferred_element_type=jnp.int32)
+    def _accumulate():
+        dims = (((1,), (0,)), ((), ()))
+        x = x_ref[0]
+        acc_g_ref[...] += jax.lax.dot_general(
+            x, wg_ref[0], dims, preferred_element_type=jnp.int32)
+        acc_u_ref[...] += jax.lax.dot_general(
+            x, wu_ref[0], dims, preferred_element_type=jnp.int32)
+
+    # zero-capacity skip list: empty experts run no MXU work; their
+    # epilogue on the zero accumulators equals the full pipeline on
+    # all-zero rows bit-for-bit (zero rows quantize to q=0).
+    if has_counts:
+        pl.when(c_ref[pl.program_id(0)] > 0)(_accumulate)
+    else:
+        _accumulate()
 
     @pl.when(k_step == n_k_steps - 1)
     def _epilogue():
@@ -689,6 +753,7 @@ def _cim_grouped_gated_kernel(x_ref, wg_ref, wu_ref, xs_ref, gs_ref, us_ref,
 def cim_grouped_gated_gemm_int8(x: jax.Array, w_gate: jax.Array,
                                 w_up: jax.Array, x_scale: jax.Array,
                                 gate_scale: jax.Array, up_scale: jax.Array,
+                                counts: jax.Array | None = None,
                                 activation: str = "gelu",
                                 out_dtype=jnp.float32,
                                 quantize_out: bool = False,
@@ -705,6 +770,8 @@ def cim_grouped_gated_gemm_int8(x: jax.Array, w_gate: jax.Array,
     hidden state is re-quantized in-epilogue, so the grouped down GEMM
     consumes int8 directly — a full MoE expert layer is then exactly
     three dispatches (quantize + this + grouped down) independent of E.
+    ``counts`` (int32 [E], scalar-prefetched) skips both dot products
+    for zero-capacity experts; outputs stay bit-identical.
     """
     E, M, K = x.shape
     E2, K2, N = w_gate.shape
@@ -720,19 +787,21 @@ def cim_grouped_gated_gemm_int8(x: jax.Array, w_gate: jax.Array,
     n_k_steps = K // block_k
     grid = (E, M // block_m, N // block_n, n_k_steps)
 
+    scalar = counts is not None
+    im = _scalar_im(scalar)
     in_specs = [
-        pl.BlockSpec((1, block_m, block_k), lambda e, m, n, k: (e, m, k)),
-        pl.BlockSpec((1, block_k, block_n), lambda e, m, n, k: (e, k, n)),
-        pl.BlockSpec((1, block_k, block_n), lambda e, m, n, k: (e, k, n)),
-        pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
-        pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)),
-        pl.BlockSpec((1, 1, block_n), lambda e, m, n, k: (e, 0, n)),
+        pl.BlockSpec((1, block_m, block_k), im(lambda e, m, n, k: (e, m, k))),
+        pl.BlockSpec((1, block_k, block_n), im(lambda e, m, n, k: (e, k, n))),
+        pl.BlockSpec((1, block_k, block_n), im(lambda e, m, n, k: (e, k, n))),
+        pl.BlockSpec((1, block_m, 1), im(lambda e, m, n, k: (e, m, 0))),
+        pl.BlockSpec((1, 1, block_n), im(lambda e, m, n, k: (e, 0, n))),
+        pl.BlockSpec((1, 1, block_n), im(lambda e, m, n, k: (e, 0, n))),
     ]
     if quantize_out:
         out_specs = [
             pl.BlockSpec((1, block_m, block_n),
-                         lambda e, m, n, k: (e, m, n)),
-            pl.BlockSpec((1, block_m, 1), lambda e, m, n, k: (e, m, 0)),
+                         im(lambda e, m, n, k: (e, m, n))),
+            pl.BlockSpec((1, block_m, 1), im(lambda e, m, n, k: (e, m, 0))),
         ]
         out_shape = [
             jax.ShapeDtypeStruct((E, M, N), jnp.int8),
@@ -740,17 +809,14 @@ def cim_grouped_gated_gemm_int8(x: jax.Array, w_gate: jax.Array,
         ]
     else:
         out_specs = pl.BlockSpec((1, block_m, block_n),
-                                 lambda e, m, n, k: (e, m, n))
+                                 im(lambda e, m, n, k: (e, m, n)))
         out_shape = jax.ShapeDtypeStruct((E, M, N), out_dtype)
 
-    return pl.pallas_call(
+    return _grouped_call(
         functools.partial(_cim_grouped_gated_kernel, n_k_steps=n_k_steps,
-                          activation=activation, quantize_out=quantize_out),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32),
-                        pltpu.VMEM((block_m, block_n), jnp.int32)],
-        interpret=interpret,
-    )(x, w_gate, w_up, x_scale, gate_scale, up_scale)
+                          activation=activation, quantize_out=quantize_out,
+                          has_counts=scalar),
+        grid, in_specs, out_specs, out_shape,
+        [pltpu.VMEM((block_m, block_n), jnp.int32),
+         pltpu.VMEM((block_m, block_n), jnp.int32)],
+        [x, w_gate, w_up, x_scale, gate_scale, up_scale], counts, interpret)

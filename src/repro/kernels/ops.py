@@ -161,6 +161,55 @@ def cim_quantized_matmul_fused(x: jax.Array, w_q: jax.Array,
     return out[:M, :N]
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cim_int8_gemm_acc(x_q: jax.Array, w_q: jax.Array,
+                      interpret: bool | None = None) -> jax.Array:
+    """Padded int32-out INT8 GEMM: x_q [M, K] int8 @ w_q [K, N] int8 ->
+    int32 [M, N].
+
+    The tensor-parallel row-parallel shard path: each shard's partial
+    accumulator is psum'd across the model axis (int32 addition is
+    exact), and ONE dequant/residual epilogue runs on the summed
+    accumulator — bit-identical to the unsharded fused pipeline.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    x_p, M = _pad_to(x_q, 0, 256)
+    x_p, _ = _pad_to(x_p, 1, CORE_K)
+    w_p, _ = _pad_to(w_q, 0, CORE_K)
+    w_p, N = _pad_to(w_p, 1, CORE_N)
+    return cim_gemm_int8(x_p, w_p, interpret=interpret)[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def cim_hidden_int8(x_q: jax.Array, x_scale: jax.Array, up_q: jax.Array,
+                    up_scale: jax.Array, gate_q: jax.Array | None = None,
+                    gate_scale: jax.Array | None = None,
+                    activation: str = "gelu",
+                    interpret: bool | None = None) -> jax.Array:
+    """MLP front half from pre-quantized activations, f32 out, no
+    requant: ``act(x@Wg) * (x@Wu)`` (or ``act(x@Wu)`` ungated).
+
+    The tensor-parallel column shard of the MLP: each device computes
+    its d_ff slice of the hidden state; the int8 requant runs *outside*
+    with the row absmax pmax'd across shards (a local requant would use
+    a different scale than the unsharded pipeline).
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    x_p, M = _pad_to(x_q, 0, 256)
+    x_p, _ = _pad_to(x_p, 1, CORE_K)
+    s_p, _ = _pad_to(x_scale, 0, 256)
+    up_p, us_p, N = _pad_weight(up_q, up_scale)
+    if gate_q is not None:
+        g_p, gs_p, _ = _pad_weight(gate_q, gate_scale)
+        h = cim_gated_gemm_int8(x_p, g_p, up_p, s_p, gs_p, us_p,
+                                activation=activation, quantize_out=False,
+                                interpret=interpret)
+    else:
+        h = cim_gemm_int8_fused(x_p, up_p, s_p, us_p, activation=activation,
+                                quantize_out=False, interpret=interpret)
+    return h[:M, :N]
+
+
 @functools.partial(jax.jit, static_argnames=("activation", "out_dtype",
                                              "interpret"))
 def cim_quantized_mlp(x: jax.Array, up_q: jax.Array, up_scale: jax.Array,
@@ -254,6 +303,7 @@ def cim_quantized_grouped_mlp(x: jax.Array, up_q: jax.Array,
                               down_scale: jax.Array,
                               gate_q: jax.Array | None = None,
                               gate_scale: jax.Array | None = None,
+                              expert_counts: jax.Array | None = None,
                               activation: str = "gelu",
                               out_dtype=jnp.float32,
                               interpret: bool | None = None) -> jax.Array:
@@ -270,6 +320,11 @@ def cim_quantized_grouped_mlp(x: jax.Array, up_q: jax.Array,
     accumulation, and the dequant/act/requant epilogues are all
     elementwise or exact, so grouping changes only the dispatch
     structure, never the numbers.
+
+    ``expert_counts`` (int32 [E]) is the zero-capacity skip list,
+    scalar-prefetched into both grouped kernels: experts that received
+    no tokens skip their MXU dot products instead of streaming all-zero
+    capacity rows through the grid — same dispatch count, same bits.
     """
     interpret = _on_cpu() if interpret is None else interpret
     E, T, d = x.shape
@@ -291,11 +346,13 @@ def cim_quantized_grouped_mlp(x: jax.Array, up_q: jax.Array,
     if gate_q is not None:
         g_p, gs_p, _ = _pad_grouped_weight(gate_q, gate_scale)
         h = cim_grouped_gated_gemm_int8(x_q, g_p, up_p, x_s, gs_p, us_p,
+                                        counts=expert_counts,
                                         activation=activation,
                                         quantize_out=fuse_requant,
                                         interpret=interpret)
     else:
         h = cim_grouped_gemm_int8(x_q, up_p, x_s, us_p,
+                                  counts=expert_counts,
                                   activation=activation,
                                   quantize_out=fuse_requant,
                                   interpret=interpret)
@@ -312,7 +369,8 @@ def cim_quantized_grouped_mlp(x: jax.Array, up_q: jax.Array,
     # down's K dim must match the (CORE_N-padded) hidden width ff_p
     down_p, ds_p, _ = _pad_grouped_weight(
         jnp.pad(down_q, ((0, 0), (0, ff_p - d_ff), (0, 0))), down_scale)
-    out = cim_grouped_gemm_int8(h_q, down_p, h_s, ds_p, out_dtype=out_dtype,
+    out = cim_grouped_gemm_int8(h_q, down_p, h_s, ds_p,
+                                counts=expert_counts, out_dtype=out_dtype,
                                 interpret=interpret)
     return out[:, :T, :N]
 

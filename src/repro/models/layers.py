@@ -210,8 +210,11 @@ def mlp_apply(params: dict, x: jax.Array, activation: str = "gelu",
         # quantize + two fused GEMM kernels) on TPU, its oracle on CPU.
         # The hidden state lives inside the kernel, so the bf16 path's
         # shard(h, "mlp") TP constraint has no tensor to attach to —
-        # this path assumes unsharded MLP weights (serving engine's
-        # single-chip decode); TP'd fused kernels need shard_map.
+        # instead, under a model-axis sharding context the pipeline
+        # itself goes tensor-parallel via shard_map (quant/tp.py):
+        # up/gate column-parallel, down row-parallel with the psum
+        # folded in before the residual epilogue, bit-identical to the
+        # unsharded path.
         from repro.quant.linear import quantized_mlp_apply
         return quantized_mlp_apply(params, x, activation, use_kernel=None,
                                    residual=residual)

@@ -459,7 +459,7 @@ class Model:
         raise KeyError("no cache index found")
 
     # -- serving-side weight quantization ------------------------------------
-    def quantize(self, params, plan=None):
+    def quantize(self, params, plan=None, mesh=None, rules=None):
         """Rewrite ``params`` per a :class:`~repro.quant.plan.QuantPlan`
         (default: the full plan — every weight matmul on the fused INT8
         CIM pipeline).
@@ -472,10 +472,24 @@ class Model:
         in their epilogues, MoE experts as ONE grouped pipeline over the
         stacked capacity buffers (dispatches constant in the expert
         count).  This is the serving engine's decode path in INT8 mode.
+
+        ``mesh`` places the quantized tree for tensor-parallel serving:
+        every leaf is device_put with the sharding its logical axes
+        resolve to (``quant.plan.plan_axes`` — q and scale co-sharded
+        on the output-channel axis, out-proj/down on the input axis,
+        MoE stacks on the expert axis), so each device holds only its
+        weight shard and the shard_map'd fused pipelines
+        (``quant/tp.py``) consume it in place.
         """
-        from repro.quant.plan import FULL_INT8, apply_plan
-        return apply_plan(self.groups, params,
-                          FULL_INT8 if plan is None else plan)
+        from repro.quant.plan import FULL_INT8, apply_plan, plan_axes
+        plan = FULL_INT8 if plan is None else plan
+        qparams = apply_plan(self.groups, params, plan)
+        if mesh is not None:
+            from repro.parallel.sharding import make_shardings
+            axes = plan_axes(self.groups, self.param_axes(), plan)
+            qparams = jax.device_put(
+                qparams, make_shardings(mesh, qparams, axes, rules))
+        return qparams
 
     def quantize_mlps(self, params):
         """Deprecated PR 1 entry point: MLP-only quantization.  Use

@@ -133,12 +133,15 @@ def moe_apply(params: dict, x: jax.Array, cfg: MoEConfig,
         # grouped down GEMM), with the expert index as a kernel grid
         # dimension over the stacked [E, B*C, d] buffer and the stacked
         # int8 weight tiles — the grouped-expert CIM mapping, dispatch
-        # count independent of E.  The hidden state lives inside the
-        # kernels, so the shard(h, "mlp") TP constraint has no tensor to
-        # attach to (same single-chip serving assumption as the
-        # quantized dense MLP).
+        # count independent of E.  The router's token tally doubles as
+        # the zero-capacity skip list (empty experts run no MXU work),
+        # and under a model-axis sharding context the grouped pipeline
+        # shards over the expert axis (quant/tp.py).
+        counts = jnp.zeros((E,), jnp.int32).at[
+            expert_ids.reshape(-1)].add(1)
         xg = xe.transpose(1, 0, 2, 3).reshape(E, B * capacity, d)
-        ye = quantized_moe_apply(params, xg, activation, use_kernel=None)
+        ye = quantized_moe_apply(params, xg, activation, use_kernel=None,
+                                 expert_counts=counts)
         ye = ye.reshape(E, B, capacity, d).transpose(1, 0, 2, 3)
     else:
         # batched expert GEMMs (einsum over expert axis; EP-shardable)

@@ -92,26 +92,44 @@ def make_shardings(mesh: Mesh, shapes: Any, axes: Any,
                                          np.ndarray)))
 
 
-def batch_sharding(mesh: Mesh, rules: Optional[dict] = None) -> NamedSharding:
-    """Sharding for [batch, ...] host data (first dim over pod+data)."""
+def batch_sharding(mesh: Mesh, rules: Optional[dict] = None,
+                   batch: Optional[int] = None) -> NamedSharding:
+    """Sharding for [batch, ...] host data (first dim over pod+data).
+
+    ``batch`` (the global batch size) enables the same greedy
+    divisibility fallback as :func:`resolve_spec`: mesh axes whose
+    cumulative size does not divide it are skipped (partially bound or
+    fully replicated) instead of returning an invalid sharding — a
+    batch of 6 on a (pod=2, data=4) mesh binds pod only, a batch of 5
+    replicates.  Without ``batch`` every available axis binds (callers
+    must know the size divides).
+    """
     rules = rules or DEFAULT_RULES
-    axes = [a for a in rules["batch"] if a in mesh.shape]
+    axes: list[str] = []
+    prod = 1
+    for a in rules["batch"]:
+        if a not in mesh.shape:
+            continue
+        size = mesh.shape[a]
+        if batch is not None and batch % (prod * size) != 0:
+            continue
+        axes.append(a)
+        prod *= size
     spec = P(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
     return NamedSharding(mesh, spec)
 
 
 def input_shardings(mesh: Mesh, specs: dict,
                     rules: Optional[dict] = None) -> dict:
-    """Shard every batch input on its leading (batch) dim when divisible."""
+    """Shard every batch input on its leading (batch) dim when divisible
+    (same fallback-to-replicate rule as :func:`batch_sharding`, e.g. the
+    batch-1 long-context cell replicates)."""
     rules = rules or DEFAULT_RULES
 
     def leaf(s):
-        n = int(np.prod([mesh.shape[a] for a in rules["batch"]
-                         if a in mesh.shape]))
-        if s.shape and s.shape[0] % n == 0:
-            return batch_sharding(mesh, rules)
-        # fall back: replicate (e.g. batch-1 long-context cell)
-        return NamedSharding(mesh, P())
+        if not s.shape:
+            return NamedSharding(mesh, P())
+        return batch_sharding(mesh, rules, batch=s.shape[0])
 
     return jax.tree.map(leaf, specs,
                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

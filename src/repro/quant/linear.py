@@ -20,6 +20,15 @@ capacity buffers — dispatch count independent of the expert count).
 ``use_kernel=None`` auto-selects: fused kernels on TPU, the
 identical-math oracle on CPU (overridable with :func:`kernel_mode`).
 
+Under an active :func:`~repro.parallel.context.sharding_context` whose
+mesh has a ``model`` axis, the four apply sites additionally go
+tensor-parallel (quant/tp.py): QKV/up/gate column-parallel, out-proj/
+down row-parallel with the int32 psum folded in before the residual
+epilogue, MoE expert-parallel — bit-identical to the unsharded path,
+with per-shard dispatch counts unchanged.  Dims the model axis does not
+divide fall back to the unsharded path (replicate-on-indivisible, the
+same rule parallel.sharding uses).
+
 Validated against the bf16 references in tests/test_quant.py.
 """
 from __future__ import annotations
@@ -32,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from . import tp as _tp
 
 
 class QuantizedLinear(NamedTuple):
@@ -75,6 +85,19 @@ def _resolve_use_kernel(use_kernel: bool | None) -> bool:
             return _KERNEL_MODE
         return jax.default_backend() != "cpu"
     return use_kernel
+
+
+def _tp_mesh_for(*dims: int):
+    """The active TP mesh when every ``dim`` divides the model-axis
+    size; None otherwise (fall back to the unsharded path — the same
+    replicate-on-indivisible rule as parallel.sharding)."""
+    mesh = _tp.tp_mesh()
+    if mesh is None:
+        return None
+    p = _tp.shards(mesh)
+    if any(d % p for d in dims):
+        return None
+    return mesh
 
 
 def _canon_activation(activation: str | None) -> str | None:
@@ -153,7 +176,13 @@ def quantized_mlp_apply(qparams: dict, x: jax.Array, activation: str,
     x2 = x.reshape(-1, x.shape[-1])
     r2 = None if residual is None else residual.reshape(-1,
                                                         residual.shape[-1])
-    if use_kernel:
+    mesh = _tp_mesh_for(qparams["up"].q.shape[1])
+    if mesh is not None:
+        # Tensor-parallel: up/gate column-parallel, down row-parallel
+        # with the int32 psum folded in before the residual epilogue
+        # (bit-identical to the unsharded pipeline, see quant/tp.py).
+        out = _tp.mlp(mesh, x2, qparams, act, use_kernel, residual=r2)
+    elif use_kernel:
         gate = qparams.get("gate")
         out = kops.cim_quantized_mlp(
             x2, qparams["up"].q, qparams["up"].scale,
@@ -202,12 +231,26 @@ def quantized_qkv_proj(qkv: QuantizedLinear, x: jax.Array,
 
     The concatenated output axis means a single quantize-in-kernel
     dispatch feeds all three projections; callers split along the head
-    axis afterwards (free — no data movement).
+    axis afterwards (free — no data movement).  Under a model-axis
+    sharding context the wide GEMM runs column-parallel: each shard's
+    fused pipeline (quantization included — the activations are
+    replicated) is the unsharded per-column math bit-for-bit.
     """
     d, HK, Dh = qkv.q.shape
     flat = QuantizedLinear(qkv.q.reshape(d, HK * Dh),
                            qkv.scale.reshape(HK * Dh))
-    wide = quantized_matmul(x, flat, use_kernel=use_kernel)
+    # Gate on the HEAD count, not the flattened width: weight placement
+    # (plan_axes -> resolve_spec) shards the structured head axis, and
+    # HK % p keeps the flattened contiguous chunks whole-head-aligned —
+    # the same layout device_put placed, so no per-step resharding.
+    mesh = _tp_mesh_for(HK)
+    if mesh is not None:
+        lead = x.shape[:-1]
+        wide = _tp.matmul_column(mesh, x.reshape(-1, d), flat.q, flat.scale,
+                                 _resolve_use_kernel(use_kernel))
+        wide = wide.reshape(*lead, -1)
+    else:
+        wide = quantized_matmul(x, flat, use_kernel=use_kernel)
     return wide.reshape(*x.shape[:-1], HK, Dh)
 
 
@@ -215,10 +258,27 @@ def quantized_out_proj(o: QuantizedLinear, attn_out: jax.Array,
                        residual: jax.Array | None = None,
                        use_kernel: bool | None = None) -> jax.Array:
     """Attention out-projection with the residual add fused into the
-    GEMM epilogue: attn_out [..., H, Dh] -> [..., d]."""
+    GEMM epilogue: attn_out [..., H, Dh] -> [..., d].
+
+    Under a model-axis sharding context the projection runs
+    row-parallel: the input-channel (head) axis is sharded, each shard
+    quantizes its slice with the pmax'd global row scale, and the int32
+    partial accumulators psum before the one dequant/residual epilogue
+    — bit-identical to the unsharded pipeline.
+    """
     H, Dh, d = o.q.shape
     flat = QuantizedLinear(o.q.reshape(H * Dh, d), o.scale)
     x2 = attn_out.reshape(*attn_out.shape[:-2], H * Dh)
+    # Gate on the head count H — the axis weight placement shards (o's
+    # "heads" logical axis) — so compute sharding matches placement.
+    mesh = _tp_mesh_for(H)
+    if mesh is not None:
+        lead = x2.shape[:-1]
+        r2 = None if residual is None else residual.reshape(-1, d)
+        out = _tp.matmul_row(mesh, x2.reshape(-1, H * Dh), flat.q,
+                             flat.scale, _resolve_use_kernel(use_kernel),
+                             residual=r2)
+        return out.reshape(*lead, d)
     return quantized_matmul(x2, flat, use_kernel=use_kernel,
                             residual=residual)
 
@@ -245,7 +305,8 @@ def quantize_moe_experts(moe_params: dict) -> dict:
 
 
 def quantized_moe_apply(qparams: dict, x: jax.Array, activation: str,
-                        use_kernel: bool | None = False) -> jax.Array:
+                        use_kernel: bool | None = False,
+                        expert_counts: jax.Array | None = None) -> jax.Array:
     """Grouped-expert fused INT8 MLPs: x [E, T, d] -> [E, T, d].
 
     ALL experts' capacity buffers run the fused pipeline in a **constant
@@ -260,19 +321,30 @@ def quantized_moe_apply(qparams: dict, x: jax.Array, activation: str,
     this replaces traced 3·E kernels and is kept as
     :func:`quantized_moe_apply_looped` for parity tests and benches.
 
+    ``expert_counts`` (int32 [E], the router's per-expert token tally)
+    is the zero-capacity skip list: experts that received no tokens
+    skip their MXU work inside the grouped kernels (scalar-prefetch
+    guard) instead of streaming all-zero rows — same dispatches, same
+    bits.  Under a model-axis sharding context the pipeline runs
+    expert-parallel: every device serves its E/p experts' stacks.
+
     use_kernel=False runs the bit-identical grouped jnp oracle; None
     auto-selects by backend (or per :func:`kernel_mode`).
     """
     use_kernel = _resolve_use_kernel(use_kernel)
     act = _canon_activation(activation)
     gate = qparams.get("gate")
-    if use_kernel:
+    mesh = _tp_mesh_for(x.shape[0])
+    if mesh is not None:
+        out = _tp.grouped_moe(mesh, x, qparams, act, use_kernel,
+                              expert_counts=expert_counts)
+    elif use_kernel:
         out = kops.cim_quantized_grouped_mlp(
             x, qparams["up"].q, qparams["up"].scale,
             qparams["down"].q, qparams["down"].scale,
             gate_q=None if gate is None else gate.q,
             gate_scale=None if gate is None else gate.scale,
-            activation=act)
+            expert_counts=expert_counts, activation=act)
     else:
         qtree = {k: (v.q, v.scale) for k, v in qparams.items()
                  if k in ("up", "gate", "down")}

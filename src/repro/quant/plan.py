@@ -171,6 +171,73 @@ def apply_plan(groups, params, plan: QuantPlan):
     return out
 
 
+def _q_scale_axes(axes: tuple, n_out: int = 1) -> "QuantizedLinear":
+    """QuantizedLinear logical axes from a weight's logical axes.
+
+    ``q`` keeps the weight's axes; ``scale`` co-shards with q on the
+    output-channel axes (the trailing ``n_out``) — the single
+    input-channel axis just before them is dropped, leading structure
+    axes (layers/expert) kept — so a mesh resolution that shards q's
+    output channels shards the scale identically, which the
+    column-parallel fused pipeline requires.
+    """
+    return QuantizedLinear(q=axes, scale=axes[:-n_out - 1] + axes[-n_out:])
+
+
+def plan_axes(groups, axes, plan: QuantPlan):
+    """Rewrite a model's logical-axes tree to match the param tree
+    :func:`apply_plan` produces: every plan-covered weight leaf becomes
+    a :class:`QuantizedLinear` of (q axes, scale axes), with the scale
+    co-sharded on the output-channel axes.
+
+    ``axes``: ``Model.param_axes()`` (stacked groups carry a leading
+    "layers" axis).  Resolving the result against a model-axis mesh via
+    ``parallel.sharding.make_shardings`` yields the tensor-parallel
+    weight placement: QKV/up/gate sharded on output channels, out-proj/
+    down on input channels, MoE stacks on the expert axis — with each
+    q's scale sharded alongside it.
+    """
+    out = dict(axes)
+    for gi, (spec, _count) in enumerate(groups):
+        mixer, ffn = spec
+        kinds = [k for k in covered_kinds(mixer, ffn) if plan.covers(k)]
+        key = f"group_{gi}"
+        if key not in out or not kinds:
+            continue
+        group = dict(out[key])
+        if ({"attn_qkv", "attn_out"} & set(kinds)) and "attn" in group:
+            attn = dict(group["attn"])
+            if "attn_qkv" in kinds and "q" in attn:
+                qa = attn.pop("q")          # [*, d, H, Dh] head-structured
+                attn.pop("k"), attn.pop("v")
+                # wide qkv [*, d, H+2KH, Dh]: q's axes cover the
+                # concatenated head axis; scale [*, H+2KH, Dh]
+                attn["qkv"] = _q_scale_axes(qa, n_out=2)
+            if "attn_out" in kinds and "o" in attn:
+                # o [*, H, Dh, d]: two input-channel axes (H, Dh) fold
+                # into the row-parallel shard dim; scale [*, d]
+                oa = attn["o"]
+                attn["o"] = QuantizedLinear(q=oa,
+                                            scale=oa[:-3] + oa[-1:])
+            group["attn"] = attn
+        if "mlp" in kinds and "mlp" in group:
+            group["mlp"] = {
+                k: _q_scale_axes(a) if k in ("up", "down", "gate") else a
+                for k, a in group["mlp"].items()}
+        if "moe_experts" in kinds and "moe" in group:
+            moe = dict(group["moe"])
+            for k in ("up", "down", "gate"):
+                if k in moe:
+                    moe[k] = _q_scale_axes(moe[k])
+            if "shared" in moe:
+                moe["shared"] = {
+                    k: _q_scale_axes(a) if k in ("up", "down", "gate") else a
+                    for k, a in moe["shared"].items()}
+            group["moe"] = moe
+        out[key] = group
+    return out
+
+
 def plan_is_applied(groups, params, plan: QuantPlan) -> bool:
     """True if every plan-covered layer already holds QuantizedLinear
     leaves (used by tests and idempotence checks)."""

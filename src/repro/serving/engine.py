@@ -18,6 +18,7 @@ All step functions are jitted once (static shapes: n_slots x 1 decode,
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from dataclasses import dataclass, field
@@ -54,8 +55,19 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, model, params, n_slots: int = 4,
                  max_len: int = 512, prefill_bucket: int = 64,
-                 quant_plan=None, quantize_mlp: bool = False):
+                 quant_plan=None, quantize_mlp: bool = False,
+                 mesh=None, rules=None):
+        """``mesh`` (a jax Mesh with a ``model`` axis) serves the
+        quant-plan decode path tensor-parallel: quantized weights are
+        device_put sharded per their logical axes (q + scale co-sharded
+        on the output-channel axis) and every prefill/decode step traces
+        under a sharding context, so the fused INT8 pipelines run as
+        shard_map'd per-device kernels (quant/tp.py) — bit-identical to
+        the unsharded engine, with per-shard dispatch counts unchanged.
+        """
         self.model = model
+        self.mesh = mesh
+        self.rules = rules
         if quantize_mlp:
             # Deprecated PR 1 flag; maps to the MLP-only QuantPlan.
             import warnings
@@ -74,7 +86,8 @@ class ServingEngine:
             # leaves, and every prefill/decode step runs the fused
             # quant->GEMM->dequant/act/residual Pallas pipeline instead
             # of bf16 einsums + XLA elementwise ops.
-            params = model.quantize(params, quant_plan)
+            params = model.quantize(params, quant_plan, mesh=mesh,
+                                    rules=rules)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
@@ -88,8 +101,17 @@ class ServingEngine:
         self._build_steps()
 
     # ------------------------------------------------------------------
+    def _mesh_ctx(self):
+        """Active sharding context for step tracing when serving on a
+        mesh (turns on the shard_map TP paths in quant/tp.py)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.parallel.context import sharding_context
+        return sharding_context(self.mesh, self.rules)
+
     def _build_steps(self):
         model = self.model
+        mesh_ctx = self._mesh_ctx
 
         @jax.jit
         def prefill_one(params, cache, tokens, slot, length):
@@ -113,9 +135,10 @@ class ServingEngine:
             sub = jax.tree.map(take, cache)
             sub = jax.tree.map(jnp.zeros_like, sub)
             sub = _set_pos_empty(sub)
-            logits, sub = model.prefill_padded(
-                params, {"inputs": tokens[None]}, sub,
-                jnp.asarray([length], jnp.int32))
+            with mesh_ctx():
+                logits, sub = model.prefill_padded(
+                    params, {"inputs": tokens[None]}, sub,
+                    jnp.asarray([length], jnp.int32))
 
             def put(full, s):
                 return jax.lax.dynamic_update_slice_in_dim(
@@ -126,8 +149,9 @@ class ServingEngine:
 
         @jax.jit
         def decode_all(params, cache, last_tokens):
-            logits, cache = model.decode_step(
-                params, {"inputs": last_tokens[:, None]}, cache)
+            with mesh_ctx():
+                logits, cache = model.decode_step(
+                    params, {"inputs": last_tokens[:, None]}, cache)
             return logits[:, 0], cache
 
         self._prefill_one = prefill_one
@@ -135,6 +159,31 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue a request, validating it against the engine's bounds.
+
+        Rejected up front (admission would otherwise fail late or
+        corrupt state silently):
+
+        * empty prompts — ``_admit`` pads by repeating the final token
+          (``prompt[-1]``), which raises IndexError mid-serve on a
+          zero-length prompt;
+        * prompts whose *bucket-padded* length reaches ``max_len`` —
+          the prefill write would wrap the ring cache and silently
+          overwrite the oldest prompt tokens (and decode needs at least
+          one free slot past the prompt).
+        """
+        L = len(req.prompt)
+        if L == 0:
+            raise ValueError("empty prompt: requests must contain at "
+                             "least one token")
+        padded = L + (-L) % self.bucket
+        if padded >= self.max_len:
+            raise ValueError(
+                f"prompt of length {L} pads to the {padded}-token prefill "
+                f"bucket, but max_len={self.max_len}: the ring cache would "
+                f"wrap and silently drop the oldest prompt tokens. Raise "
+                f"max_len (or shrink prefill_bucket) so padded prompts "
+                f"stay strictly below it.")
         self.queue.append(req)
 
     def _sample(self, req: Request, logits: np.ndarray, step: int) -> int:

@@ -89,3 +89,28 @@ def _install_hypothesis_stub() -> None:
 
 
 _install_hypothesis_stub()
+
+
+def run_forced_devices_subprocess(code: str, devices: int = 8,
+                                  timeout: int = 540) -> str:
+    """Run ``code`` in a fresh interpreter with ``devices`` forced host
+    devices (XLA_FLAGS must be set before jax initializes, hence the
+    subprocess) and ``PYTHONPATH=src``; assert success, return stdout.
+
+    The shared harness for every multi-device test
+    (test_distribution's dry-run cells, test_tp's shard_map suite).
+    """
+    import os
+    import subprocess
+    import textwrap
+    from pathlib import Path
+
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(repo / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

@@ -2,17 +2,16 @@
 pipeline parallelism + multi-pod dry-run cells (subprocess: they need 512
 host devices, which must be set before jax initializes)."""
 import json
-import os
-import subprocess
-import sys
-import textwrap
 from pathlib import Path
 
 import jax
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
-from repro.parallel.sharding import DEFAULT_RULES, resolve_spec
+from repro.parallel.sharding import (DEFAULT_RULES, batch_sharding,
+                                     resolve_spec)
+
+from conftest import run_forced_devices_subprocess as _run_subprocess
 
 def _abstract_mesh(sizes, names):
     try:
@@ -23,7 +22,6 @@ def _abstract_mesh(sizes, names):
 
 MESH_1POD = _abstract_mesh((16, 16), ("data", "model"))
 MESH_2POD = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
-REPO = Path(__file__).resolve().parent.parent
 
 
 class TestResolveSpec:
@@ -73,15 +71,26 @@ class TestResolveSpec:
         assert spec[2] == "model"
 
 
-def _run_subprocess(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = str(REPO / "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=540,
-                         env=env)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+class TestBatchSharding:
+    """Regression: ``batch_sharding`` used to bind every available mesh
+    axis without a divisibility check, handing direct callers invalid
+    shardings for non-divisible batch sizes — it now applies the same
+    greedy fallback-to-replicate rule as ``resolve_spec``."""
+
+    def test_divisible_binds_all_axes(self):
+        assert batch_sharding(MESH_2POD, batch=64).spec == \
+            P(("pod", "data"))
+
+    def test_partial_divisibility_binds_prefix(self):
+        # 6 % 2 == 0 but 6 % (2*16) != 0: pod binds, data is skipped
+        assert batch_sharding(MESH_2POD, batch=6).spec == P("pod")
+
+    def test_indivisible_replicates(self):
+        assert batch_sharding(MESH_2POD, batch=5).spec == P(None)
+        assert batch_sharding(MESH_1POD, batch=1).spec == P(None)
+
+    def test_no_batch_keeps_legacy_binding(self):
+        assert batch_sharding(MESH_2POD).spec == P(("pod", "data"))
 
 
 class TestPipelineParallel:

@@ -350,6 +350,44 @@ class TestQuantizedMoE:
                              if e.primitive.name == "pallas_call"])
         assert counts[2] == counts[16] == 3, counts
 
+    @pytest.mark.slow
+    def test_zero_capacity_skip_list_bitwise(self):
+        """The scalar-prefetch skip list (``expert_counts``): experts the
+        router assigned no tokens run no MXU work inside the grouped
+        kernels, yet the outputs stay bit-identical to the unskipped
+        grouped pipeline AND the per-expert loop — including the
+        quantize_out intermediates consumed by the down GEMM."""
+        E, d, F, T = 4, 36, 24, 5
+        qparams = self._moe_weights(E, d, F)
+        xe = jax.random.normal(jax.random.PRNGKey(12), (E, T, d)) * 0.5
+        xe = xe.at[1].set(0.0).at[3].set(0.0)
+        counts = jnp.array([2, 0, 4, 0], jnp.int32)
+        skipped = quantized_moe_apply(qparams, xe, "swiglu",
+                                      use_kernel=True, expert_counts=counts)
+        unskipped = quantized_moe_apply(qparams, xe, "swiglu",
+                                        use_kernel=True)
+        looped = quantized_moe_apply_looped(qparams, xe, "swiglu",
+                                            use_kernel=True)
+        assert (np.asarray(skipped) == np.asarray(unskipped)).all()
+        assert (np.asarray(skipped) == np.asarray(looped)).all()
+        assert (np.asarray(skipped)[1] == 0).all()
+        assert (np.asarray(skipped)[3] == 0).all()
+
+    def test_skip_list_keeps_dispatch_count(self):
+        """The skip list rides the existing grouped dispatches as a
+        scalar-prefetch operand — no extra Pallas kernels."""
+        E = 4
+        qparams = self._moe_weights(E, 36, 24)
+        xe = jnp.zeros((E, 5, 36))
+        counts = jnp.ones((E,), jnp.int32)
+        jaxpr = jax.make_jaxpr(
+            lambda a, c, q=qparams: quantized_moe_apply(
+                q, a, "swiglu", use_kernel=True, expert_counts=c))(xe,
+                                                                   counts)
+        n = len([e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
+                 if e.primitive.name == "pallas_call"])
+        assert n == 3, n
+
 
 class TestQuantPlan:
     """The whole-model INT8 execution plan (ISSUE 2 acceptance bar)."""

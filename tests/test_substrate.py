@@ -272,6 +272,40 @@ class TestServingEngine:
         eng.run_until_done(max_iters=50)
         assert len(req.generated) == 5
 
+    def test_submit_rejects_empty_prompt(self, small_model):
+        """Regression: an empty prompt used to IndexError deep inside
+        ``_admit`` (``req.prompt[-1]`` for bucket padding) mid-serve;
+        submit now rejects it up front with a clear error."""
+        cfg, m, params = small_model
+        eng = ServingEngine(m, params, n_slots=1, max_len=32,
+                            prefill_bucket=4)
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit(Request(uid=0, prompt=np.array([], np.int32)))
+        assert not eng.queue
+
+    def test_submit_rejects_prompt_that_would_wrap_cache(self, small_model):
+        """Regression: a prompt whose bucket-padded length reaches
+        max_len used to wrap the ring cache silently (the prefill write
+        evicted the oldest prompt tokens, corrupting generations);
+        submit now rejects it with a clear error."""
+        cfg, m, params = small_model
+        eng = ServingEngine(m, params, n_slots=1, max_len=16,
+                            prefill_bucket=8)
+        # len 12 pads to 16 == max_len -> wrap
+        with pytest.raises(ValueError, match="ring cache would wrap"):
+            eng.submit(Request(uid=0,
+                               prompt=np.arange(12, dtype=np.int32) % 7))
+        # len 9 pads to 16 too, even though 9 < max_len
+        with pytest.raises(ValueError, match="ring cache would wrap"):
+            eng.submit(Request(uid=1,
+                               prompt=np.arange(9, dtype=np.int32) % 7))
+        # len 7 pads to 8 < 16: admitted and served normally
+        ok = Request(uid=2, prompt=np.arange(7, dtype=np.int32) % 7,
+                     max_new_tokens=3)
+        eng.submit(ok)
+        eng.run_until_done(max_iters=20)
+        assert len(ok.generated) == 3
+
     def test_quantize_mlp_flag_shim(self, small_model):
         cfg, m, params = small_model
         with pytest.warns(DeprecationWarning):
