@@ -3,17 +3,19 @@
 # `slow` — they run the kernels through the CPU interpreter and
 # dominate suite wall-clock).  `make test-tp` runs the tensor-parallel
 # suite under 8 forced host devices (its tests also subprocess their
-# own device counts, so it works from any environment).
+# own device counts, so it works from any environment).  `make test-dit`
+# runs the diffusion (DiT) suite including its slow kernel-path tests.
 # `make docs-check` import-checks every python code block in
-# README.md/docs/ so documentation can't rot.
+# README.md/docs/, every examples/ module, and the configs registry
+# (each config module must be registered) so docs/configs can't rot.
 # `make verify` is the pre-push check: fast tests + docs-check + the
-# multi-device TP suite plus a BENCH smoke run (simulator rows only;
-# merges into BENCH_kernels.json without clobbering the kernel rows —
-# a full `make bench` additionally prunes rows for renamed/deleted
-# benches).
+# multi-device TP suite + the DiT suite plus a BENCH smoke run
+# (simulator rows only; merges into BENCH_kernels.json without
+# clobbering the kernel rows — a full `make bench` additionally prunes
+# rows for renamed/deleted benches).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-tp bench verify docs-check
+.PHONY: test test-fast test-tp test-dit bench verify docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,11 +27,14 @@ test-tp:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PY) -m pytest -x -q tests/test_tp.py
 
+test-dit:
+	$(PY) -m pytest -x -q tests/test_diffusion.py
+
 docs-check:
 	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) -m benchmarks.run
 
-verify: test-fast docs-check test-tp
+verify: test-fast docs-check test-tp test-dit
 	$(PY) -m benchmarks.run --skip-kernels

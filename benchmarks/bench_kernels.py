@@ -180,6 +180,14 @@ def bench_kernels():
                      f"vs_looped={t_looped/t_grouped:.2f}x"))
 
     # ------------------------------------------------------------------
+    # DiT block (the diffusion workload class): the full-plan fused
+    # block — 6 Pallas dispatches (adaLN modulation + wide QKV +
+    # out-proj + 3-dispatch MLP) — vs the unfused form (5 int32-out GEMM
+    # kernels with XLA quant/dequant/bias/modulate passes around them).
+    # ------------------------------------------------------------------
+    rows.extend(bench_dit_block())
+
+    # ------------------------------------------------------------------
     # Tensor-parallel fused MLP (QuantPlan mlp under a model-axis mesh):
     # the shard_map pipeline at 1 vs 2 vs 4 shards.  Runs in a
     # subprocess because the shard count needs forced host devices
@@ -188,6 +196,11 @@ def bench_kernels():
     # baseline against kernel_gated_mlp_fused.
     # ------------------------------------------------------------------
     rows.extend(bench_tp_mlp())
+
+    # The full-plan DiT block under a 1/2-way model mesh (same
+    # subprocess pattern; the paper's Design B partitions the DiT
+    # weight-stationary arrays the same way).
+    rows.extend(bench_tp_dit())
 
     # flash attention 2x256x4x32
     q = jax.random.normal(k1, (2, 256, 4, 32), jnp.float32)
@@ -222,6 +235,127 @@ def bench_kernels():
                  sm)
     rows.append(("kernel_online_softmax", t_sm, "512x4096 two-phase"))
     return rows
+
+
+def bench_dit_block():
+    """`kernel_dit_block_{fused,unfused}` rows: one full-plan DiT block
+    on the fused pipeline vs per-GEMM int32-out kernels with XLA
+    epilogues (both from the same int8 weights, full attention + adaLN
+    math included in both)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_dit_config
+    from repro.models.dit import DiTModel, dit_block_apply, _ln
+    from repro.quant import kernel_mode
+
+    cfg = get_dit_config("dit-test")
+    model = DiTModel(cfg)
+    qparams = model.quantize(model.init(KEY))
+    block = jax.tree.map(lambda a: a[0], qparams["blocks"])
+    B, T, d = 2, cfg.tokens, cfg.d_model
+    H, Dh = cfg.n_heads, cfg.head_dim
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (B, T, d), jnp.float32) * 0.5
+    c = jax.random.normal(k2, (B, d), jnp.float32) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    adaln, attn, mlp = block["adaln"], block["attn"], block["mlp"]
+    qkv_q = attn["qkv"].q.reshape(d, -1)
+    qkv_s = attn["qkv"].scale.reshape(-1)
+    o_q = attn["o"].q.reshape(H * Dh, d)
+
+    @jax.jit
+    def dit_block_unfused(a, cc):
+        mod = ops.cim_quantized_matmul(jax.nn.silu(cc), adaln["kernel"].q,
+                                       adaln["kernel"].scale)
+        mod = mod + adaln["bias"]
+        sm, scm, gm, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        h = _ln(a) * (1 + scm[:, None]) + sm[:, None]
+        wide = ops.cim_quantized_matmul(h.reshape(B * T, d), qkv_q, qkv_s)
+        wide = wide.reshape(B, T, 3 * H, Dh)
+        q, kk, v = jnp.split(wide, 3, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / jnp.sqrt(float(Dh))
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B * T, H * Dh)
+        o = ops.cim_quantized_matmul(o, o_q, attn["o"].scale)
+        a = a + gm[:, None] * o.reshape(B, T, d)
+        h = _ln(a) * (1 + sc2[:, None]) + s2[:, None]
+        up = ops.cim_quantized_matmul(h.reshape(B * T, d), mlp["up"].q,
+                                      mlp["up"].scale)
+        hh = jax.nn.gelu(up, approximate=True)
+        dn = ops.cim_quantized_matmul(hh, mlp["down"].q, mlp["down"].scale)
+        return a + g2[:, None] * dn.reshape(B, T, d)
+
+    @jax.jit
+    def dit_block_fused(a, cc):
+        return dit_block_apply(block, a, cc, cfg, pos)
+
+    with kernel_mode(True):
+        t_unfused = _time(dit_block_unfused, x, c)
+        t_fused = _time(dit_block_fused, x, c)
+    return [("kernel_dit_block_unfused", t_unfused,
+             "adaLN DiT block; 5 int32-out GEMM kernels + XLA "
+             "quant/dequant/modulate"),
+            ("kernel_dit_block_fused", t_fused,
+             f"full-plan fused block, 6 dispatches (adaLN + QKV + "
+             f"out-proj + 3 MLP); vs_unfused={t_unfused/t_fused:.2f}x")]
+
+
+def bench_tp_dit():
+    """`dit_tp_s{1,2}` rows: the full-plan fused DiT block under a
+    model-axis mesh at 1 vs 2 shards (subprocess with forced host
+    devices, same pattern as `bench_tp_mlp`)."""
+    code = textwrap.dedent("""
+        import json, time
+        import jax, jax.numpy as jnp
+        from repro.configs import get_dit_config
+        from repro.models.dit import DiTModel, dit_block_apply
+        from repro.parallel.context import sharding_context
+        from repro.quant import kernel_mode
+
+        cfg = get_dit_config("dit-test")
+        model = DiTModel(cfg)
+        qparams = model.quantize(model.init(jax.random.PRNGKey(0)))
+        block = jax.tree.map(lambda a: a[0], qparams["blocks"])
+        B, T, d = 2, cfg.tokens, cfg.d_model
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, T, d)) * 0.5
+        c = jax.random.normal(jax.random.PRNGKey(2), (B, d)) * 0.5
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        out = {}
+        with kernel_mode(True):
+            for p in (1, 2):
+                mesh = jax.make_mesh((p,), ("model",))
+                f = jax.jit(lambda a, cc: dit_block_apply(
+                    block, a, cc, cfg, pos))
+                with sharding_context(mesh):
+                    jax.block_until_ready(f(x, c))      # compile
+                    t0 = time.perf_counter()
+                    for _ in range(3):
+                        r = f(x, c)
+                    jax.block_until_ready(r)
+                out[p] = (time.perf_counter() - t0) / 3 * 1e6
+        print("TPROWS " + json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env.setdefault("PYTHONPATH", "src")
+    try:
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, timeout=540,
+                              env=env)
+        line = next(ln for ln in proc.stdout.splitlines()
+                    if ln.startswith("TPROWS "))
+        times = json.loads(line[len("TPROWS "):])
+    except Exception as e:                                  # noqa: BLE001
+        print(f"# dit_tp bench skipped: subprocess failed ({e})",
+              file=sys.stderr)
+        return []
+    t1 = times["1"]
+    return [(f"dit_tp_s{p}", times[str(p)],
+             f"full-plan DiT block shard_map {p}-way model mesh"
+             + ("" if p == 1 else f"; vs_1shard={t1/times[str(p)]:.2f}x"))
+            for p in (1, 2)]
 
 
 def bench_tp_mlp():

@@ -264,6 +264,39 @@ def bench_quant_plan_energy():
                      f"2x8x8_int8_vs_digital="
                      f"{d['digital_bf16']/d['cim_small_int8']:.1f}x"
                      f"(paper 27.3x)"))
+
+    # The runnable DiT denoise step under the same accounting: covered
+    # matmuls (adaLN modulation + QKV/out-proj/MLP) at the INT8-CIM
+    # point, attention/softmax at bf16, CONDITIONING vector ops at the
+    # plan's element width.  Design B (8x(16x8)) is the paper's DiT
+    # pick; the 33.8% latency-reduction headline is its nearby
+    # 8x(16x16) exploration point.
+    from repro.core.bridge import dit_graph_from_config
+    from repro.configs import get_dit_config
+
+    dit_cfg = get_dit_config("dit-xl-2")
+
+    def dit_work():
+        g_bf16 = dit_graph_from_config(dit_cfg, 8,
+                                       quant_plan=QuantPlan.none())
+        g_int8 = dit_graph_from_config(dit_cfg, 8,
+                                       quant_plan=QuantPlan.full())
+        b = simulate_graph(BASE, g_bf16)
+        db = simulate_graph(design_b(), g_int8)
+        return {
+            "digital_bf16": b.mxu_energy_j,
+            "cim_int8": simulate_graph(CIM, g_int8).mxu_energy_j,
+            "designB_int8": db.mxu_energy_j,
+            "designB_lat_red": 1 - db.latency_s / b.latency_s,
+        }
+    d, us = _timed(dit_work)
+    rows.append(("quant_plan_energy_dit", us,
+                 f"cim_int8_vs_digital_bf16="
+                 f"{d['digital_bf16']/d['cim_int8']:.1f}x "
+                 f"designB_int8_vs_digital="
+                 f"{d['digital_bf16']/d['designB_int8']:.1f}x "
+                 f"designB_lat_red={d['designB_lat_red']:.3f}"
+                 f"(paper .338 at 8x16x16)"))
     return rows
 
 

@@ -1,8 +1,10 @@
 from .base import ModelConfig
-from .registry import ARCH_IDS, all_configs, get_config
+from .registry import ARCH_IDS, DIT_ARCH_IDS, all_configs, \
+    all_dit_configs, get_config, get_dit_config
 from .shapes import ASSIGNED_SHAPES, PERF_SHAPES, SHAPES, ShapeCell, \
     cell_applicable, input_specs, reduced_config
 
 __all__ = ["ModelConfig", "ARCH_IDS", "all_configs", "get_config", "SHAPES",
-           "ASSIGNED_SHAPES", "PERF_SHAPES",
+           "ASSIGNED_SHAPES", "PERF_SHAPES", "DIT_ARCH_IDS",
+           "all_dit_configs", "get_dit_config",
            "ShapeCell", "cell_applicable", "input_specs", "reduced_config"]

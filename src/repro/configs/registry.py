@@ -1,4 +1,17 @@
-"""--arch registry: id -> ModelConfig."""
+"""--arch registry: id -> config.
+
+Two tables, one per workload class:
+
+* ``_MODULES`` — autoregressive LMs (``ModelConfig``; the 10 assigned
+  architectures).  ``get_config`` / ``ARCH_IDS`` / ``all_configs``.
+* ``_DIT_MODULES`` — diffusion transformers (``DiTConfig``).
+  ``get_dit_config`` / ``DIT_ARCH_IDS`` / ``all_dit_configs``.
+
+EVERY runnable config module in this package must appear in one of the
+tables: ``REGISTERED_CONFIG_MODULES`` is the union the docs-check tool
+(tools/check_docs.py, `make docs-check`) compares against the package
+directory, so an unregistered config module fails the pre-push gate.
+"""
 from __future__ import annotations
 
 import importlib
@@ -18,16 +31,44 @@ _MODULES = {
     "paligemma-3b": "paligemma_3b",
 }
 
+_DIT_MODULES = {
+    "dit-xl-2": "dit_xl_2",
+    "dit-test": "dit_test",
+}
+
 ARCH_IDS = tuple(_MODULES)
+DIT_ARCH_IDS = tuple(_DIT_MODULES)
+
+# Non-config support modules in this package (everything else must be a
+# registered config module — enforced by `make docs-check`).
+_SUPPORT_MODULES = frozenset({"__init__", "base", "registry", "shapes"})
+REGISTERED_CONFIG_MODULES = (frozenset(_MODULES.values())
+                             | frozenset(_DIT_MODULES.values()))
+
+
+def _load(table: dict, arch: str, what: str):
+    try:
+        mod = table[arch]
+    except KeyError:
+        raise KeyError(f"unknown {what} {arch!r}; options: {list(table)}")
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
 
 
 def get_config(arch: str) -> ModelConfig:
-    try:
-        mod = _MODULES[arch]
-    except KeyError:
-        raise KeyError(f"unknown arch {arch!r}; options: {list(_MODULES)}")
-    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+    if arch in _DIT_MODULES:
+        raise KeyError(f"{arch!r} is a diffusion config; use "
+                       f"get_dit_config({arch!r})")
+    return _load(_MODULES, arch, "arch")
+
+
+def get_dit_config(arch: str):
+    """DiT architecture id -> :class:`repro.models.dit.DiTConfig`."""
+    return _load(_DIT_MODULES, arch, "dit arch")
 
 
 def all_configs() -> dict[str, ModelConfig]:
     return {a: get_config(a) for a in ARCH_IDS}
+
+
+def all_dit_configs() -> dict:
+    return {a: get_dit_config(a) for a in DIT_ARCH_IDS}

@@ -17,9 +17,12 @@ Per-family lowering notes (DESIGN.md §Arch-applicability):
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.configs.base import ModelConfig
 
 from .operators import Graph, MatMulOp, OpKind, VectorOp
+from .workloads import TransformerLayerSpec, dit_block_ops
 
 
 def _attn_ops(cfg: ModelConfig, batch: int, q_len: int, kv_len: int,
@@ -351,4 +354,58 @@ def graph_from_config(cfg: ModelConfig, batch: int, q_len: int,
                    weight_bits=bits, out_bits=16))
     if quant_plan is not None:
         g.ops[-1] = g.ops[-1].scaled(act_bits=16, weight_bits=16)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Diffusion transformers (DiT)
+# ---------------------------------------------------------------------------
+# OpKind -> plan layer kind for one DiT block: the adaLN modulation GEMM
+# is the only OTHER_MATMUL in the block graph (there is no router), and
+# the non-gated MLP rides the "mlp" kind.  Attention QK/SV and softmax
+# are not weight matmuls the plan covers — they stay bf16, same as the
+# LLM lowering.
+_DIT_COVERAGE = {
+    OpKind.QKV: "attn_qkv",
+    OpKind.PROJ: "attn_out",
+    OpKind.FFN: "mlp",
+    OpKind.OTHER_MATMUL: "adaln",
+}
+
+
+def dit_spec(cfg) -> TransformerLayerSpec:
+    """A :class:`repro.models.dit.DiTConfig` -> the analytic layer spec
+    its blocks lower to (non-causal, non-gated GELU MLP, MHA)."""
+    return TransformerLayerSpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+        head_dim=cfg.head_dim, d_ff=cfg.d_ff, gated_ffn=False,
+        activation=OpKind.GELU, causal=False)
+
+
+def dit_graph_from_config(cfg, batch: int, bits: int = 8,
+                          quant_plan=None) -> Graph:
+    """Operator graph for one DiT denoise evaluation of ``cfg`` (a
+    :class:`repro.models.dit.DiTConfig`), one repeat per block.
+
+    ``quant_plan`` costs exactly the mixed-precision execution the
+    runnable model dispatches: plan-covered weight matmuls (adaLN
+    modulation, QKV, out-projection, MLP) at the INT8-CIM energy point,
+    attention score matmuls/softmax at bf16 — and the
+    ``OpKind.CONDITIONING`` shift/scale/gate VectorOps at the *plan's*
+    element width (8-bit I/O when ``adaln`` is covered: the modulation
+    parameters stream out of the fused epilogue as INT8-pipeline
+    products) instead of always at the fp path.
+    """
+    g = Graph(name=f"{cfg.name}-denoise-b{batch}", repeat=cfg.n_layers)
+    ops = dit_block_ops(dit_spec(cfg), batch, cfg.tokens, bits)
+    if quant_plan is None:
+        g.extend(ops)
+        return g
+    for op in ops:
+        if isinstance(op, VectorOp) and op.kind == OpKind.CONDITIONING:
+            op = dataclasses.replace(
+                op, bits=8 if quant_plan.covers("adaln") else 16)
+        else:
+            op = _plan_op_bits(op, quant_plan, _DIT_COVERAGE)
+        g.add(op)
     return g

@@ -1,0 +1,9 @@
+"""Diffusion inference subsystem: DDPM schedule, DDIM/Euler samplers with
+classifier-free guidance, and a batched image-generation engine driving
+:class:`repro.models.dit.DiTModel` denoise steps through the fused INT8
+CIM pipeline (no KV cache — fixed-token-grid batches)."""
+from .sampler import DiffusionSchedule, guided_eps, sample
+from .engine import DiffusionEngine, DiffusionStats, ImageRequest
+
+__all__ = ["DiffusionSchedule", "guided_eps", "sample",
+           "DiffusionEngine", "DiffusionStats", "ImageRequest"]

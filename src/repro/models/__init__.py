@@ -11,10 +11,14 @@ def __getattr__(name):
     if name in ("Model", "build_model"):
         from .model import Model, build_model
         return {"Model": Model, "build_model": build_model}[name]
+    if name in ("DiTConfig", "DiTModel", "build_dit"):
+        from . import dit
+        return getattr(dit, name)
     if name in ("Param", "param_axes", "param_values"):
         from . import layers
         return getattr(layers, name)
     raise AttributeError(name)
 
 
-__all__ = ["Model", "build_model", "Param", "param_axes", "param_values"]
+__all__ = ["Model", "build_model", "DiTConfig", "DiTModel", "build_dit",
+           "Param", "param_axes", "param_values"]

@@ -4,11 +4,12 @@ from .linear import (dequantize_tree, kernel_mode, quantize_attention,
                      quantized_moe_apply, quantized_moe_apply_looped,
                      quantized_out_proj, quantized_qkv_proj,
                      QuantizedLinear)
-from .plan import FULL_INT8, LAYER_KINDS, QuantPlan, apply_plan, \
-    covered_kinds, plan_axes, plan_is_applied
+from .plan import DIT_LAYER_KINDS, FULL_INT8, LAYER_KINDS, QuantPlan, \
+    apply_plan, covered_kinds, plan_axes, plan_is_applied
 from .tp import TP_AXIS, tp_mesh
 
 __all__ = ["QuantizedLinear", "QuantPlan", "FULL_INT8", "LAYER_KINDS",
+           "DIT_LAYER_KINDS",
            "apply_plan", "covered_kinds", "plan_axes", "plan_is_applied",
            "kernel_mode", "quantize_linear", "quantize_mlp",
            "quantize_attention", "quantize_moe_experts", "quantized_matmul",

@@ -20,6 +20,13 @@ Pallas pipeline:
                                                  the stacked capacity
                                                  buffers — dispatches
                                                  constant in E)
+    ``adaln``        DiT adaLN modulation GEMM  (c -> 6*d shift/scale/gate
+                                                 parameters; one fused
+                                                 quantize-in-kernel GEMM
+                                                 with the bias in its
+                                                 epilogue — diffusion
+                                                 blocks only, see
+                                                 models/dit.py)
 
 :func:`apply_plan` rewrites covered weights into
 :class:`~repro.quant.linear.QuantizedLinear` leaves; the model layers
@@ -46,7 +53,13 @@ import jax
 from .linear import (QuantizedLinear, quantize_attention, quantize_mlp,
                      quantize_moe_experts)
 
-LAYER_KINDS = ("mlp", "attn_qkv", "attn_out", "moe_experts")
+LAYER_KINDS = ("mlp", "attn_qkv", "attn_out", "moe_experts", "adaln")
+
+# The layer kinds a DiT (diffusion-transformer) block draws on: the adaLN
+# modulation GEMM plus the same attention/MLP projections as a dense LLM
+# block.  ``DiTModel.quantize`` and the simulator's
+# ``dit_graph_from_config`` both derive coverage from it.
+DIT_LAYER_KINDS = ("adaln", "attn_qkv", "attn_out", "mlp")
 
 
 def covered_kinds(mixer: str, ffn: str) -> tuple[str, ...]:
@@ -81,6 +94,7 @@ class QuantPlan:
     attn_qkv: bool = True
     attn_out: bool = True
     moe_experts: bool = True
+    adaln: bool = True
 
     # -- constructors ----------------------------------------------------
     @classmethod
@@ -98,7 +112,7 @@ class QuantPlan:
         """PR 1 behaviour: only dense-FFN MLPs quantized (the
         ``quantize_mlp=True`` deprecation shim maps here)."""
         return cls(mlp=True, attn_qkv=False, attn_out=False,
-                   moe_experts=False)
+                   moe_experts=False, adaln=False)
 
     # -- queries ---------------------------------------------------------
     def covers(self, kind: str) -> bool:
@@ -171,7 +185,7 @@ def apply_plan(groups, params, plan: QuantPlan):
     return out
 
 
-def _q_scale_axes(axes: tuple, n_out: int = 1) -> "QuantizedLinear":
+def q_scale_axes(axes: tuple, n_out: int = 1) -> "QuantizedLinear":
     """QuantizedLinear logical axes from a weight's logical axes.
 
     ``q`` keeps the weight's axes; ``scale`` co-shards with q on the
@@ -182,6 +196,34 @@ def _q_scale_axes(axes: tuple, n_out: int = 1) -> "QuantizedLinear":
     column-parallel fused pipeline requires.
     """
     return QuantizedLinear(q=axes, scale=axes[:-n_out - 1] + axes[-n_out:])
+
+
+_q_scale_axes = q_scale_axes     # pre-PR-5 internal name
+
+
+def attn_plan_axes(attn: dict, qkv: bool = True, out: bool = True) -> dict:
+    """Logical-axes rewrite for one attention layer's projection leaves
+    (the axes mirror of :func:`~repro.quant.linear.quantize_attention`);
+    shared by LLM ``plan_axes`` and the DiT model's mesh placement."""
+    attn = dict(attn)
+    if qkv and "q" in attn:
+        qa = attn.pop("q")          # [*, d, H, Dh] head-structured
+        attn.pop("k"), attn.pop("v")
+        # wide qkv [*, d, H+2KH, Dh]: q's axes cover the
+        # concatenated head axis; scale [*, H+2KH, Dh]
+        attn["qkv"] = q_scale_axes(qa, n_out=2)
+    if out and "o" in attn:
+        # o [*, H, Dh, d]: two input-channel axes (H, Dh) fold
+        # into the row-parallel shard dim; scale [*, d]
+        oa = attn["o"]
+        attn["o"] = QuantizedLinear(q=oa, scale=oa[:-3] + oa[-1:])
+    return attn
+
+
+def mlp_plan_axes(mlp: dict) -> dict:
+    """Logical-axes rewrite for one (dense or DiT) MLP's weight leaves."""
+    return {k: q_scale_axes(a) if k in ("up", "down", "gate") else a
+            for k, a in mlp.items()}
 
 
 def plan_axes(groups, axes, plan: QuantPlan):
@@ -206,33 +248,18 @@ def plan_axes(groups, axes, plan: QuantPlan):
             continue
         group = dict(out[key])
         if ({"attn_qkv", "attn_out"} & set(kinds)) and "attn" in group:
-            attn = dict(group["attn"])
-            if "attn_qkv" in kinds and "q" in attn:
-                qa = attn.pop("q")          # [*, d, H, Dh] head-structured
-                attn.pop("k"), attn.pop("v")
-                # wide qkv [*, d, H+2KH, Dh]: q's axes cover the
-                # concatenated head axis; scale [*, H+2KH, Dh]
-                attn["qkv"] = _q_scale_axes(qa, n_out=2)
-            if "attn_out" in kinds and "o" in attn:
-                # o [*, H, Dh, d]: two input-channel axes (H, Dh) fold
-                # into the row-parallel shard dim; scale [*, d]
-                oa = attn["o"]
-                attn["o"] = QuantizedLinear(q=oa,
-                                            scale=oa[:-3] + oa[-1:])
-            group["attn"] = attn
+            group["attn"] = attn_plan_axes(group["attn"],
+                                           qkv="attn_qkv" in kinds,
+                                           out="attn_out" in kinds)
         if "mlp" in kinds and "mlp" in group:
-            group["mlp"] = {
-                k: _q_scale_axes(a) if k in ("up", "down", "gate") else a
-                for k, a in group["mlp"].items()}
+            group["mlp"] = mlp_plan_axes(group["mlp"])
         if "moe_experts" in kinds and "moe" in group:
             moe = dict(group["moe"])
             for k in ("up", "down", "gate"):
                 if k in moe:
-                    moe[k] = _q_scale_axes(moe[k])
+                    moe[k] = q_scale_axes(moe[k])
             if "shared" in moe:
-                moe["shared"] = {
-                    k: _q_scale_axes(a) if k in ("up", "down", "gate") else a
-                    for k, a in moe["shared"].items()}
+                moe["shared"] = mlp_plan_axes(moe["shared"])
             group["moe"] = moe
         out[key] = group
     return out

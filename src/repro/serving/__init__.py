@@ -1,3 +1,16 @@
 from .engine import EngineStats, Request, ServingEngine
 
-__all__ = ["EngineStats", "Request", "ServingEngine"]
+
+def __getattr__(name):
+    # The diffusion serving path lives in repro.diffusion (no KV cache,
+    # request-level batching); re-exported here so both engines are
+    # discoverable from one namespace.  Lazy to keep the LLM engine
+    # import-light.
+    if name in ("DiffusionEngine", "ImageRequest", "DiffusionStats"):
+        from repro import diffusion
+        return getattr(diffusion, name)
+    raise AttributeError(name)
+
+
+__all__ = ["EngineStats", "Request", "ServingEngine",
+           "DiffusionEngine", "ImageRequest", "DiffusionStats"]

@@ -1,19 +1,25 @@
 """Doc-smoke checker: every ```python block in README.md and docs/ must
-be real code.
+be real code, every examples/ module must import, and every config
+module must be registered.
 
     PYTHONPATH=src python tools/check_docs.py   (or: make docs-check)
 
-Two checks per fenced ``python`` block, doctest-style but cheap enough
-for every `make verify`:
+Checks, doctest-style but cheap enough for every `make verify`:
 
-1. the block must *compile* (syntax errors in docs rot silently);
+1. every fenced ``python`` block must *compile* (syntax errors in docs
+   rot silently);
 2. every ``import``/``from`` statement in it must *execute* — so docs
    can never reference a module, or a name inside one, that a refactor
    renamed or deleted (``from repro.quant import QuantPlan`` fails the
-   check the moment ``QuantPlan`` disappears).
+   check the moment ``QuantPlan`` disappears);
+3. the same compile + import-execute pass over every ``examples/*.py``
+   module (an example whose imports broke is a broken example);
+4. every runnable config module in ``src/repro/configs/`` must appear
+   in the registry (``repro.configs.registry``) — an unregistered
+   config is dead code the ``--arch`` surface can't reach.
 
-Non-import statements are NOT executed: doc snippets may build models or
-serve requests, which is what examples/ and the test suite are for.
+Non-import statements are NOT executed: doc snippets/examples may build
+models or serve requests, which is what the test suite is for.
 """
 from __future__ import annotations
 
@@ -66,6 +72,31 @@ def check_block(where: str, src: str, failures: list[str]) -> None:
                             f"{type(e).__name__}: {e}")
 
 
+def check_examples(failures: list[str]) -> int:
+    """Compile + import-execute every examples/*.py module."""
+    examples = sorted((REPO / "examples").glob("*.py"))
+    for py in examples:
+        check_block(str(py.relative_to(REPO)), py.read_text(), failures)
+    return len(examples)
+
+
+def check_registry(failures: list[str]) -> int:
+    """Every config module must be registered in repro.configs.registry."""
+    from repro.configs import registry
+    cfg_dir = REPO / "src" / "repro" / "configs"
+    modules = {p.stem for p in cfg_dir.glob("*.py")}
+    runnable = modules - registry._SUPPORT_MODULES
+    for missing in sorted(runnable - registry.REGISTERED_CONFIG_MODULES):
+        failures.append(
+            f"src/repro/configs/{missing}.py: config module not "
+            f"registered in configs/registry.py (_MODULES/_DIT_MODULES)")
+    for stale in sorted(registry.REGISTERED_CONFIG_MODULES - modules):
+        failures.append(
+            f"configs/registry.py: registered module {stale!r} has no "
+            f"src/repro/configs/{stale}.py")
+    return len(runnable)
+
+
 def main() -> int:
     md_files: list[pathlib.Path] = []
     for entry in DOC_FILES:
@@ -81,11 +112,14 @@ def main() -> int:
         for lineno, src in python_blocks(md):
             n_blocks += 1
             check_block(f"{md.relative_to(REPO)}:{lineno}", src, failures)
+    n_examples = check_examples(failures)
+    n_configs = check_registry(failures)
 
     for f in failures:
         print(f"FAIL {f}")
     print(f"docs-check: {n_blocks} python block(s) in {len(md_files)} "
-          f"file(s), {len(failures)} failure(s)")
+          f"file(s), {n_examples} example(s), {n_configs} registered "
+          f"config(s), {len(failures)} failure(s)")
     if not n_blocks:
         print("FAIL docs-check: no python blocks found — README.md/docs/ "
               "missing or fences renamed?")
