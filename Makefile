@@ -8,14 +8,18 @@
 # `make docs-check` import-checks every python code block in
 # README.md/docs/, every examples/ module, and the configs registry
 # (each config module must be registered) so docs/configs can't rot.
+# `make test-chaos` runs the reliability suite (fault models, degraded
+# mode, and the deterministic chaos soak against the hardened engines)
+# including its slow-marked soak tests.
 # `make verify` is the pre-push check: fast tests + docs-check + the
-# multi-device TP suite + the DiT suite plus a BENCH smoke run
-# (simulator rows only; merges into BENCH_kernels.json without
-# clobbering the kernel rows — a full `make bench` additionally prunes
-# rows for renamed/deleted benches).
+# multi-device TP suite + the DiT suite + the chaos/reliability suite
+# plus a BENCH smoke run (simulator rows only; merges into
+# BENCH_kernels.json without clobbering the kernel rows — a full
+# `make bench` additionally prunes rows for renamed/deleted benches and
+# measures the resilience_ber_* chaos rows).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-tp test-dit bench verify docs-check
+.PHONY: test test-fast test-tp test-dit test-chaos bench verify docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -30,11 +34,14 @@ test-tp:
 test-dit:
 	$(PY) -m pytest -x -q tests/test_diffusion.py
 
+test-chaos:
+	$(PY) -m pytest -x -q tests/test_reliability.py
+
 docs-check:
 	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) -m benchmarks.run
 
-verify: test-fast docs-check test-tp test-dit
+verify: test-fast docs-check test-tp test-dit test-chaos
 	$(PY) -m benchmarks.run --skip-kernels

@@ -300,6 +300,49 @@ def bench_quant_plan_energy():
     return rows
 
 
+def bench_ecc_overhead():
+    """Reliability: what SECDED(72,64) weight-memory ECC costs at the
+    paper's 27.3x design point.
+
+    CIM weights are *resident* — a retention upset corrupts every
+    subsequent matmul until the tile is rewritten — so deployment needs
+    in-macro ECC.  This bench re-runs the 2x(8x8) INT8 decode point
+    (bench_quant_plan_energy's 27.3x figure) under
+    ``EnergyModel.with_cim_ecc()`` (check-bit leakage + write overhead)
+    and the matching area model, and reports the residual bit-error
+    rate the code leaves behind (reliability.faults.ecc_residual_ber).
+    """
+    from repro.configs import get_config
+    from repro.core import cim_tpu
+    from repro.core.bridge import graph_from_config
+    from repro.quant import QuantPlan
+    from repro.reliability import ecc_residual_ber
+
+    small_cim = cim_tpu(8, 8, num_mxus=2)       # paper's 27.3x point
+    cfg = get_config("gemma-2b")
+
+    def work():
+        g_bf16 = graph_from_config(cfg, 8, 1, 1280,
+                                   quant_plan=QuantPlan.none())
+        g_int8 = graph_from_config(cfg, 8, 1, 1280,
+                                   quant_plan=QuantPlan.full())
+        return {
+            "digital_bf16": simulate_graph(BASE, g_bf16).mxu_energy_j,
+            "plain": simulate_graph(small_cim, g_int8).mxu_energy_j,
+            "ecc": simulate_graph(small_cim, g_int8,
+                                  em=EM.with_cim_ecc()).mxu_energy_j,
+            "area": mxu_area_mm2(small_cim),
+            "area_ecc": mxu_area_mm2(small_cim, cim_ecc=True),
+        }
+    d, us = _timed(work)
+    return [("ecc_overhead", us,
+             f"energy_x={d['ecc']/d['plain']:.3f} "
+             f"area_x={d['area_ecc']/d['area']:.3f} "
+             f"2x8x8_int8+ecc_vs_digital="
+             f"{d['digital_bf16']/d['ecc']:.1f}x(paper 27.3x unprotected) "
+             f"residual_ber@1e-4={ecc_residual_ber(1e-4):.1e}")]
+
+
 def bench_int4_extension():
     """Beyond-paper: INT4 bit-serial CIM mode.
 
@@ -338,4 +381,4 @@ def bench_int4_extension():
 
 ALL_BENCHES = [bench_table2, bench_fig2d_breakdown, bench_fig6, bench_fig7,
                bench_fig8, bench_assigned_archs, bench_quant_plan_energy,
-               bench_int4_extension]
+               bench_int4_extension, bench_ecc_overhead]

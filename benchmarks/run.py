@@ -55,6 +55,8 @@ def main() -> None:
     if not args.skip_kernels:
         from benchmarks.bench_kernels import bench_kernels
         rows.extend(bench_kernels())
+        from benchmarks.bench_resilience import bench_resilience
+        rows.extend(bench_resilience())
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     out_path = args.json or BENCH_JSON

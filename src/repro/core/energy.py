@@ -19,6 +19,7 @@ modeled so total-chip numbers are available.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 from .hardware import CIMMXUConfig, SystolicMXUConfig, TPUConfig
@@ -118,6 +119,32 @@ class EnergyModel:
         return bytes_moved * self.ici_pj_per_byte * PJ
 
     # ------------------------------------------------------------------
+    def with_cim_ecc(self, data_bits: int = 64,
+                     code_bits: int = 72) -> "EnergyModel":
+        """Energy model with in-macro SECDED ECC on the CIM weight SRAM.
+
+        A (72,64) word code adds ``code_bits/data_bits`` check cells per
+        stored weight word, so the retention leakage that dominates the
+        small-array decode story (``cim_idle_pj`` — the 27.3x mechanism)
+        scales by exactly that storage factor, as do weight writes
+        (check bits are written too) plus a ~5% encoder toggle.  The MAC
+        datapath is untouched: check bits never enter the bit-serial
+        compute, and the syndrome check rides the existing weight-port
+        scrub path.  Digital-MXU coefficients are unchanged (its SRAM is
+        operand buffering, not resident storage).
+
+        Residual fault rate after correction: ``reliability.faults.
+        ecc_residual_ber``; the area price: ``mxu_area_mm2(tpu,
+        cim_ecc=True)``.
+        """
+        f = code_bits / data_bits
+        return dataclasses.replace(
+            self,
+            cim_idle_pj=self.cim_idle_pj * f,
+            cim_weight_write_pj_per_byte=(
+                self.cim_weight_write_pj_per_byte * f * 1.05),
+        )
+
     def peak_tops_per_watt(self, tpu: TPUConfig) -> float:
         """Full-utilization efficiency — reproduces Table II."""
         if isinstance(tpu.mxu, CIMMXUConfig):
@@ -132,12 +159,22 @@ DIGITAL_TOPS_PER_MM2 = 0.648
 CIM_TOPS_PER_MM2 = 1.31
 
 
-def mxu_area_mm2(tpu: TPUConfig) -> float:
+# SECDED(72,64) on a CIM macro grows only the SRAM cell array (+12.5%
+# cells for check bits); periphery, bit-serial datapath, and the systolic
+# grid are unchanged.  The cell array is ~60% of macro area in the
+# paper's 22 nm digital-SRAM CIM macro, hence the ~7.5% macro overhead.
+ECC_SRAM_AREA_FRACTION = 0.6
+
+
+def mxu_area_mm2(tpu: TPUConfig, cim_ecc: bool = False) -> float:
     if isinstance(tpu.mxu, CIMMXUConfig):
         density = CIM_TOPS_PER_MM2
     else:
         density = DIGITAL_TOPS_PER_MM2
-    return tpu.peak_tops / density
+    area = tpu.peak_tops / density
+    if cim_ecc and isinstance(tpu.mxu, CIMMXUConfig):
+        area *= 1.0 + ECC_SRAM_AREA_FRACTION * (72 / 64 - 1.0)
+    return area
 
 
 DEFAULT_ENERGY_MODEL = EnergyModel()

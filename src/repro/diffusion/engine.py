@@ -14,6 +14,12 @@ LLM engine's prefill buckets).
 (6 Pallas dispatches per DiT block); ``mesh`` serves it tensor-parallel
 via the shard_map'd apply sites (quant/tp.py), bit-identical to the
 unsharded engine.
+
+Both engines share one request lifecycle (serving/lifecycle.py): an
+``ImageRequest`` carries the same terminal :class:`RequestStatus` and
+deadline/TTL plumbing as the LLM engine's ``Request`` — bounded-queue
+backpressure, deadline expiry while queued, non-finite-latent health
+checks, and loud stalls.
 """
 from __future__ import annotations
 
@@ -21,27 +27,32 @@ import contextlib
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.lifecycle import (EngineStallError, LifecycleMixin,
+                                     RequestStatus)
 from .sampler import DEFAULT_SCHEDULE, DiffusionSchedule, sample
 
 
 @dataclass
-class ImageRequest:
+class ImageRequest(LifecycleMixin):
     uid: int
     label: int                          # class id in [0, n_classes)
     num_steps: int = 8
     cfg_scale: float = 0.0              # 0 = unguided
     method: str = "ddim"
     seed: int = 0
+    deadline_s: Optional[float] = None  # TTL from submission (engine clock)
 
-    # filled by the engine
+    # filled by the engine (``done`` is the shared lifecycle property)
     latents: Optional[np.ndarray] = None   # [C, H, W]
-    done: bool = False
+    status: RequestStatus = RequestStatus.QUEUED
+    error: Optional[str] = None
+    submitted_at: float = 0.0
 
 
 @dataclass
@@ -51,12 +62,21 @@ class DiffusionStats:
     images_out: int = 0
     batch_occupancy: list = field(default_factory=list)
     wall_s: float = 0.0
+    # reliability counters (monotone, mirrors serving.EngineStats)
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    rejected: int = 0
+    timed_out: int = 0
 
 
 class DiffusionEngine:
     def __init__(self, model, params, batch_size: int = 4,
                  quant_plan=None, mesh=None, rules=None,
-                 schedule: DiffusionSchedule = DEFAULT_SCHEDULE):
+                 schedule: DiffusionSchedule = DEFAULT_SCHEDULE,
+                 max_queue: Optional[int] = None, degraded: bool = False,
+                 health_checks: bool = True,
+                 fault_hook: Optional[Callable] = None, clock=None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
@@ -66,6 +86,12 @@ class DiffusionEngine:
         self.params = params
         self.batch = batch_size
         self.schedule = schedule
+        self.max_queue = max_queue
+        self.degraded = degraded
+        self.health_checks = health_checks
+        self.fault_hook = fault_hook
+        self.closed = False
+        self._clock = clock if clock is not None else time.monotonic
         self.queue: deque[ImageRequest] = deque()
         self.stats = DiffusionStats()
         self._samplers: dict = {}
@@ -77,15 +103,25 @@ class DiffusionEngine:
         from repro.parallel.context import sharding_context
         return sharding_context(self.mesh, self.rules)
 
+    @contextlib.contextmanager
+    def _step_ctx(self):
+        with self._mesh_ctx():
+            if self.degraded:
+                from repro.quant import degraded_mode
+                with degraded_mode(True):
+                    yield
+            else:
+                yield
+
     def _sampler(self, num_steps: int, cfg_scale: float, method: str):
         """One jitted sampler per (steps, guidance, method) trace key."""
         key = (num_steps, cfg_scale, method)
         if key not in self._samplers:
-            mesh_ctx = self._mesh_ctx
+            step_ctx = self._step_ctx
 
             @jax.jit
             def run(params, noise, labels):
-                with mesh_ctx():
+                with step_ctx():
                     return sample(self.model, params, labels, x_init=noise,
                                   num_steps=num_steps, cfg_scale=cfg_scale,
                                   method=method, schedule=self.schedule)
@@ -94,19 +130,50 @@ class DiffusionEngine:
         return self._samplers[key]
 
     # ------------------------------------------------------------------
-    def submit(self, req: ImageRequest) -> None:
-        """Queue a request, validating it against the model's label
-        space (the null class is reserved for CFG) and the sampler's
-        step bounds."""
+    def _finish(self, req: ImageRequest, status: RequestStatus,
+                error: Optional[str] = None) -> RequestStatus:
+        req.finish(status, error)
+        if status is RequestStatus.OK:
+            self.stats.completed += 1
+        elif status is RequestStatus.FAILED:
+            self.stats.failed += 1
+        elif status is RequestStatus.TIMED_OUT:
+            self.stats.timed_out += 1
+        else:
+            self.stats.rejected += 1
+        return status
+
+    def submit(self, req: ImageRequest) -> RequestStatus:
+        """Queue a request; returns its (possibly terminal) status.
+
+        Malformed requests raise ``ValueError`` (label outside the model's
+        class space — the null class is reserved for CFG — or bad step
+        count / sampler method); capacity rejections (closed engine,
+        bounded queue full) return a typed ``RequestStatus.REJECTED``.
+        """
         if not (0 <= req.label < self.model.cfg.n_classes):
+            self._finish(req, RequestStatus.REJECTED, "label out of range")
             raise ValueError(
                 f"label {req.label} outside [0, {self.model.cfg.n_classes})"
                 " (the last embedding row is the reserved CFG null class)")
         if req.num_steps < 0:
+            self._finish(req, RequestStatus.REJECTED, "negative num_steps")
             raise ValueError("num_steps must be >= 0")
         if req.method not in ("ddim", "euler"):
+            self._finish(req, RequestStatus.REJECTED, "unknown method")
             raise ValueError(f"unknown sampler method {req.method!r}")
+        if self.closed:
+            return self._finish(req, RequestStatus.REJECTED,
+                                "engine closed (draining or shut down)")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return self._finish(
+                req, RequestStatus.REJECTED,
+                f"queue full ({self.max_queue} waiting): backpressure")
+        req.status = RequestStatus.QUEUED
+        req.submitted_at = self._clock()
         self.queue.append(req)
+        self.stats.submitted += 1
+        return RequestStatus.QUEUED
 
     def _noise(self, req: ImageRequest) -> jax.Array:
         cfg = self.model.cfg
@@ -115,9 +182,23 @@ class DiffusionEngine:
             key, (cfg.in_channels, cfg.input_size, cfg.input_size),
             jnp.float32)
 
+    def _purge_expired(self, now: float) -> None:
+        if not any(r.deadline_s is not None for r in self.queue):
+            return
+        keep: deque[ImageRequest] = deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if r.expired(now):
+                self._finish(r, RequestStatus.TIMED_OUT,
+                             "deadline expired while queued")
+            else:
+                keep.append(r)
+        self.queue = keep
+
     def step(self) -> None:
         """Run one batch: pop up to ``batch_size`` queued requests that
         share the head-of-queue trace key, pad, sample, deliver."""
+        self._purge_expired(self._clock())
         if not self.queue:
             return
         head = self.queue[0]
@@ -127,6 +208,7 @@ class DiffusionEngine:
         while self.queue and len(batch) < self.batch:
             r = self.queue.popleft()
             if (r.num_steps, r.cfg_scale, r.method) == key:
+                r.status = RequestStatus.ACTIVE
                 batch.append(r)
             else:
                 rest.append(r)
@@ -138,17 +220,61 @@ class DiffusionEngine:
         noise = jnp.stack([self._noise(r) for r in rows])
         labels = jnp.asarray([r.label for r in rows], jnp.int32)
         lat = np.asarray(self._sampler(*key)(self.params, noise, labels))
+        if self.fault_hook is not None:
+            out = self.fault_hook("denoise", lat)
+            if out is not None:
+                lat = np.asarray(out)
+        delivered = 0
         for i, r in enumerate(batch):
+            if self.health_checks and not np.isfinite(lat[i]).all():
+                self._finish(r, RequestStatus.FAILED,
+                             "non-finite latents")
+                continue
             r.latents = lat[i]
-            r.done = True
+            self._finish(r, RequestStatus.OK)
+            delivered += 1
         self.stats.batches += 1
         self.stats.denoise_steps += head.num_steps
-        self.stats.images_out += len(batch)
+        self.stats.images_out += delivered
         self.stats.batch_occupancy.append(len(batch) / self.batch)
         self.stats.wall_s += time.perf_counter() - t0
 
-    def run_until_done(self, max_iters: int = 10_000) -> None:
-        it = 0
-        while self.queue and it < max_iters:
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def run_until_done(self, max_iters: int = 10_000,
+                       on_stall: str = "raise") -> None:
+        """Step until the queue is empty; a stall is never silent
+        (same contract as ``ServingEngine.run_until_done``)."""
+        if on_stall not in ("raise", "timeout"):
+            raise ValueError(f"on_stall must be 'raise' or 'timeout', "
+                             f"got {on_stall!r}")
+        for _ in range(max_iters):
+            if not self.queue:
+                return
             self.step()
-            it += 1
+        if not self.queue:
+            return
+        if on_stall == "timeout":
+            while self.queue:
+                self._finish(self.queue.popleft(), RequestStatus.TIMED_OUT,
+                             "engine stalled at max_iters")
+            return
+        raise EngineStallError(
+            f"run_until_done hit max_iters={max_iters} with "
+            f"{len(self.queue)} request(s) still queued")
+
+    def drain(self, max_iters: int = 10_000,
+              on_stall: str = "timeout") -> None:
+        """Stop admitting new work and run the accepted queue dry."""
+        self.closed = True
+        self.run_until_done(max_iters, on_stall=on_stall)
+
+    def shutdown(self, drain: bool = True, max_iters: int = 10_000) -> None:
+        if drain:
+            self.drain(max_iters)
+            return
+        self.closed = True
+        while self.queue:
+            self._finish(self.queue.popleft(), RequestStatus.REJECTED,
+                         "engine shutdown")

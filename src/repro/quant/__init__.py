@@ -1,4 +1,5 @@
-from .linear import (dequantize_tree, kernel_mode, quantize_attention,
+from .linear import (degraded_mode, dequantize_tree, kernel_mode,
+                     quantize_attention,
                      quantize_linear, quantize_mlp, quantize_moe_experts,
                      quantized_matmul, quantized_mlp_apply,
                      quantized_moe_apply, quantized_moe_apply_looped,
@@ -11,7 +12,7 @@ from .tp import TP_AXIS, tp_mesh
 __all__ = ["QuantizedLinear", "QuantPlan", "FULL_INT8", "LAYER_KINDS",
            "DIT_LAYER_KINDS",
            "apply_plan", "covered_kinds", "plan_axes", "plan_is_applied",
-           "kernel_mode", "quantize_linear", "quantize_mlp",
+           "kernel_mode", "degraded_mode", "quantize_linear", "quantize_mlp",
            "quantize_attention", "quantize_moe_experts", "quantized_matmul",
            "quantized_mlp_apply", "quantized_moe_apply",
            "quantized_moe_apply_looped", "quantized_qkv_proj",

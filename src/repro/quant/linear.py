@@ -87,6 +87,52 @@ def _resolve_use_kernel(use_kernel: bool | None) -> bool:
     return use_kernel
 
 
+# ---------------------------------------------------------------------------
+# Degraded-mode execution (reliability layer)
+# ---------------------------------------------------------------------------
+_DEGRADED_MODE: bool = False
+
+
+@contextlib.contextmanager
+def degraded_mode(enable: bool = True):
+    """Per-layer degraded-mode fallback for the enclosed scope.
+
+    When enabled, every quantized apply site folds a cheap
+    ``jnp.isfinite`` reduction over its fused-pipeline output and — only
+    on the step where that screen trips — re-runs the layer on the
+    unquantized reference path with non-finite inputs/scales sanitized
+    to zero (``lax.cond``: exactly one branch executes at runtime, so
+    the healthy path pays one reduction, not a second GEMM).  The
+    contract: a degraded layer's output is always finite; corrupted
+    channels contribute zero instead of poisoning the residual stream.
+
+    Default off — the jaxpr (and hence the pinned per-block dispatch
+    counts) is unchanged unless a reliability-aware caller (the serving
+    engines' ``degraded=True``) opts in at trace time.
+    """
+    global _DEGRADED_MODE
+    prev = _DEGRADED_MODE
+    _DEGRADED_MODE = enable
+    try:
+        yield
+    finally:
+        _DEGRADED_MODE = prev
+
+
+def _san(a):
+    """Sanitize a float operand for the degraded fallback (int8 weights
+    are always finite; scales/activations/bias/residual may not be)."""
+    return None if a is None else jnp.nan_to_num(
+        a, nan=0.0, posinf=0.0, neginf=0.0)
+
+
+def _screen(out: jax.Array, fallback) -> jax.Array:
+    """Finite screen + reference fallback when degraded mode is active."""
+    if not _DEGRADED_MODE:
+        return out
+    return jax.lax.cond(jnp.isfinite(out).all(), lambda: out, fallback)
+
+
 def _tp_mesh_for(*dims: int):
     """The active TP mesh when every ``dim`` divides the model-axis
     size; None otherwise (fall back to the unsharded path — the same
@@ -142,6 +188,9 @@ def quantized_matmul(x: jax.Array, w: QuantizedLinear,
     else:
         out = kref.fused_matmul_ref(x2, w.q, w.scale, bias=bias,
                                     residual=r2, activation=activation)
+    out = _screen(out, lambda: kref.fused_matmul_ref(
+        _san(x2), w.q, _san(w.scale), bias=_san(bias), residual=_san(r2),
+        activation=activation))
     return out.reshape(*lead, -1)
 
 
@@ -193,6 +242,9 @@ def quantized_mlp_apply(qparams: dict, x: jax.Array, activation: str,
     else:
         qtree = {k: (v.q, v.scale) for k, v in qparams.items()}
         out = kref.quantized_mlp_ref(x2, qtree, act, residual=r2)
+    out = _screen(out, lambda: kref.quantized_mlp_ref(
+        _san(x2), {k: (v.q, _san(v.scale)) for k, v in qparams.items()
+                   if k in ("up", "gate", "down")}, act, residual=_san(r2)))
     return out.reshape(*lead, -1).astype(x.dtype)
 
 
@@ -248,6 +300,8 @@ def quantized_qkv_proj(qkv: QuantizedLinear, x: jax.Array,
         lead = x.shape[:-1]
         wide = _tp.matmul_column(mesh, x.reshape(-1, d), flat.q, flat.scale,
                                  _resolve_use_kernel(use_kernel))
+        wide = _screen(wide, lambda: kref.fused_matmul_ref(
+            _san(x.reshape(-1, d)), flat.q, _san(flat.scale)))
         wide = wide.reshape(*lead, -1)
     else:
         wide = quantized_matmul(x, flat, use_kernel=use_kernel)
@@ -278,6 +332,9 @@ def quantized_out_proj(o: QuantizedLinear, attn_out: jax.Array,
         out = _tp.matmul_row(mesh, x2.reshape(-1, H * Dh), flat.q,
                              flat.scale, _resolve_use_kernel(use_kernel),
                              residual=r2)
+        out = _screen(out, lambda: kref.fused_matmul_ref(
+            _san(x2.reshape(-1, H * Dh)), flat.q, _san(flat.scale),
+            residual=_san(r2)))
         return out.reshape(*lead, d)
     return quantized_matmul(x2, flat, use_kernel=use_kernel,
                             residual=residual)
@@ -349,6 +406,9 @@ def quantized_moe_apply(qparams: dict, x: jax.Array, activation: str,
         qtree = {k: (v.q, v.scale) for k, v in qparams.items()
                  if k in ("up", "gate", "down")}
         out = kref.grouped_quantized_mlp_ref(x, qtree, act)
+    out = _screen(out, lambda: kref.grouped_quantized_mlp_ref(
+        _san(x), {k: (v.q, _san(v.scale)) for k, v in qparams.items()
+                  if k in ("up", "gate", "down")}, act))
     return out.astype(x.dtype)
 
 

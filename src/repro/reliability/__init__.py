@@ -1,0 +1,29 @@
+"""Reliability layer: CIM fault injection, degraded-mode execution, and
+the chaos harness for the hardened serving engines.
+
+Spans three layers of the stack (docs/architecture.md §8):
+
+* hardware/quant — seeded weight-memory fault models over the int8
+  ``QuantizedLinear`` tensors per CIM-macro geometry, with mitigations
+  (outlier-channel protection, modeled SECDED ECC costed by the
+  simulator via ``EnergyModel.with_cim_ecc``): faults.py;
+* kernel/model boundary — finite screening + per-layer reference-path
+  fallback (``degraded_mode``): degrade.py;
+* serving — deterministic mid-serve chaos against the engines' request
+  lifecycle (``RequestStatus``, deadlines, backpressure, health
+  checks): chaos.py.
+"""
+from .chaos import (ChaosMonkey, ChaosReport, SoakResult,
+                    assert_all_terminal, chaos_soak,
+                    engine_invariant_violations)
+from .degrade import all_finite, degraded_mode, finite_rows, tree_finite
+from .faults import (FAULT_KINDS, FaultConfig, FaultReport, ecc_residual_ber,
+                     inject_int8, inject_tree, protect_tree)
+
+__all__ = [
+    "FAULT_KINDS", "FaultConfig", "FaultReport", "inject_int8",
+    "inject_tree", "protect_tree", "ecc_residual_ber",
+    "degraded_mode", "finite_rows", "all_finite", "tree_finite",
+    "ChaosMonkey", "ChaosReport", "SoakResult", "chaos_soak",
+    "assert_all_terminal", "engine_invariant_violations",
+]

@@ -1,0 +1,44 @@
+"""Finite-value screening at the kernel/model boundary.
+
+Two halves of the degraded-execution story live here:
+
+* **In-graph** (traced): :func:`repro.quant.degraded_mode` — re-exported
+  below — arms a ``jnp.isfinite`` screen over every fused-pipeline
+  output with a ``lax.cond`` fallback that re-runs the flagged layer on
+  the unquantized reference path with sanitized operands (see
+  quant/linear.py).  The serving engines turn it on with
+  ``degraded=True`` at trace time.
+* **Host-side** (this module): cheap numpy screens over fetched logits /
+  latents / param trees, used by the engines' health checks and the
+  chaos harness's invariant audits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.quant import degraded_mode  # noqa: F401  (re-export)
+
+__all__ = ["degraded_mode", "finite_rows", "all_finite", "tree_finite"]
+
+
+def finite_rows(logits: np.ndarray) -> np.ndarray:
+    """Per-row finiteness of a [..., vocab] logit block: the engine's
+    health-check reduction (a failing row fails only its own request)."""
+    return np.isfinite(logits).all(axis=-1)
+
+
+def all_finite(x) -> bool:
+    """Scalar screen over one array (prefill logits, a latent image)."""
+    return bool(np.isfinite(np.asarray(x)).all())
+
+
+def tree_finite(tree) -> bool:
+    """True when every inexact leaf of a pytree is fully finite (int8
+    weights are finite by construction and are skipped)."""
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(tree):
+        a = np.asarray(leaf)
+        if np.issubdtype(a.dtype, np.floating) and not np.isfinite(a).all():
+            return False
+    return True

@@ -1,0 +1,256 @@
+"""Seeded, deterministic CIM weight-memory fault models.
+
+The paper's CIM-MXU keeps int8 weights *resident* in SRAM macros
+(weight-stationary, §III-B), so the dominant hardware failure mode is
+not transient datapath noise but corruption of the stored weight bits:
+retention upsets, stuck cells, and whole-column (bit-line / sense-amp)
+failures inside a macro.  The CIM literature (PAPERS.md: "Memory Is All
+You Need", arxiv 2406.08413) calls these non-idealities the central
+deployment risk of compute-in-memory.
+
+This module injects exactly those faults into the software mirror of the
+resident weights — the int8 ``q`` tensors of ``QuantizedLinear`` leaves
+— per the CIM-tile geometry of the simulator's MXU model
+(``CIMCoreConfig``: a macro stores a ``k_dim x n_dim`` block; a column
+failure takes out one output channel across one macro's k-rows).
+
+Everything is host-side numpy on uint8 bit views and fully deterministic
+from ``FaultConfig.seed`` (per-leaf streams derived from the tree path),
+so a chaos run is replayable bit-for-bit.
+
+Mitigations modeled alongside:
+
+* :func:`protect_tree` — outlier-channel protection: the requant guard
+  keeps a pristine copy of the output channels with the largest
+  per-channel ``scale`` (where a flipped int8 MSB causes the largest
+  absolute weight error, ``err = dq * scale``) and restores them after
+  injection, the software mirror of storing outlier channels in a
+  protected (ECC'd / digital) region.
+* :func:`ecc_residual_ber` — the residual bit-error rate after an
+  in-macro SECDED(72,64) code, used by the energy/area costing in
+  ``core.energy`` (``EnergyModel.with_cim_ecc``).
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+FAULT_KINDS = ("bit_flip", "stuck_at_0", "stuck_at_1", "column_kill")
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """One fault-injection campaign over a weight tree.
+
+    ``ber`` is the per-*bit* error probability for the bit-level kinds,
+    and the per-(tile, column) failure probability for ``column_kill``.
+    ``tile_k``/``tile_n`` default to the paper's CIM macro geometry
+    (``CIMCoreConfig``: 128 x 256); use :meth:`from_mxu` to take them
+    from a simulator MXU model.
+    """
+
+    kind: str = "bit_flip"
+    ber: float = 0.0
+    seed: int = 0
+    tile_k: int = 128   # macro rows (reduction dim) — CIMCoreConfig.k_dim
+    tile_n: int = 256   # macro cols (output dim)    — CIMCoreConfig.n_dim
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if not 0.0 <= self.ber <= 1.0:
+            raise ValueError(f"ber must be in [0, 1], got {self.ber}")
+
+    @classmethod
+    def from_mxu(cls, mxu, **kw) -> "FaultConfig":
+        """Tile geometry from a simulator ``CIMMXUConfig``."""
+        return cls(tile_k=mxu.core.k_dim, tile_n=mxu.core.n_dim, **kw)
+
+
+@dataclass
+class FaultReport:
+    """What a deterministic injection campaign actually touched."""
+
+    kind: str = ""
+    ber: float = 0.0
+    seed: int = 0
+    leaves: int = 0            # QuantizedLinear leaves visited
+    total_bits: int = 0        # bits at risk (8 * int8 elements)
+    faults: int = 0            # bits flipped/stuck, or cells zeroed
+    per_leaf: dict = None      # path -> fault count
+
+    def __post_init__(self):
+        if self.per_leaf is None:
+            self.per_leaf = {}
+
+
+# ---------------------------------------------------------------------------
+# Single-tensor injection
+# ---------------------------------------------------------------------------
+def inject_int8(q: np.ndarray, cfg: FaultConfig,
+                rng: np.random.Generator) -> tuple[np.ndarray, int]:
+    """Inject ``cfg`` faults into one int8 tensor; returns (copy, count).
+
+    Bit-level kinds draw the fault count from Binomial(bits, ber) and
+    place faults uniformly over the flat uint8 bit view — ``bit_flip``
+    XORs, ``stuck_at_0``/``stuck_at_1`` AND/OR a mask (so a cell stuck
+    at its current value is correctly a no-op).  ``column_kill`` views
+    the tensor as [rows, out_channels] (output channels on the last
+    axis, all leading axes flattened — the layout the fused kernels
+    stream), carves it into ``tile_k``-row x single-column macro cells,
+    and zeroes whole cells with probability ``ber`` each: one dead
+    bit-line takes out one output channel within one resident macro.
+    """
+    if q.dtype != np.int8:
+        raise TypeError(f"expected int8 weights, got {q.dtype}")
+    out = np.array(q, copy=True)
+    if cfg.ber <= 0.0 or out.size == 0:
+        return out, 0
+
+    if cfg.kind == "column_kill":
+        cols = out.shape[-1]
+        rows = out.size // cols
+        q2 = out.reshape(rows, cols)
+        n_slabs = -(-rows // cfg.tile_k)              # ceil
+        kill = rng.random((n_slabs, cols)) < cfg.ber  # per macro cell
+        killed = 0
+        for s, j in zip(*np.nonzero(kill)):
+            lo = s * cfg.tile_k
+            hi = min(lo + cfg.tile_k, rows)
+            q2[lo:hi, j] = 0
+            killed += hi - lo
+        return out, killed
+
+    flat = out.reshape(-1).view(np.uint8)
+    n_bits = flat.size * 8
+    k = int(rng.binomial(n_bits, cfg.ber))
+    if k == 0:
+        return out, 0
+    pos = rng.choice(n_bits, size=k, replace=False)
+    byte_idx = pos // 8
+    mask = (np.uint8(1) << (pos % 8).astype(np.uint8))
+    if cfg.kind == "bit_flip":
+        np.bitwise_xor.at(flat, byte_idx, mask)
+    elif cfg.kind == "stuck_at_0":
+        np.bitwise_and.at(flat, byte_idx, np.uint8(0xFF) ^ mask)
+    else:  # stuck_at_1
+        np.bitwise_or.at(flat, byte_idx, mask)
+    return out, k
+
+
+# ---------------------------------------------------------------------------
+# Tree-level injection / protection
+# ---------------------------------------------------------------------------
+def _quantized_leaves(tree):
+    from repro.quant import QuantizedLinear
+
+    def is_ql(x):
+        return isinstance(x, QuantizedLinear)
+
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_ql), is_ql
+
+
+def _leaf_rng(path, cfg: FaultConfig) -> np.random.Generator:
+    """Independent, replayable stream per leaf: the campaign seed mixed
+    with a stable hash of the tree path (order-independent)."""
+    key = zlib.crc32(jax.tree_util.keystr(path).encode())
+    return np.random.default_rng((cfg.seed, key))
+
+
+def inject_tree(params: Any, cfg: FaultConfig) -> tuple[Any, FaultReport]:
+    """Inject faults into every ``QuantizedLinear.q`` of a param tree.
+
+    Only the int8 resident-weight tensors are touched — scales, norms,
+    embeddings, and any unquantized bf16 weights live outside the CIM
+    macros and pass through unchanged.  Returns a new tree (same
+    treedef, same avals — safe to swap into a live engine without
+    retracing) plus a :class:`FaultReport`.
+    """
+    from repro.quant import QuantizedLinear
+
+    (flat, treedef), is_ql = _quantized_leaves(params)
+    report = FaultReport(kind=cfg.kind, ber=cfg.ber, seed=cfg.seed)
+    new_leaves = []
+    for path, leaf in flat:
+        if not is_ql(leaf):
+            new_leaves.append(leaf)
+            continue
+        q_np = np.asarray(leaf.q)
+        faulted, n = inject_int8(q_np, cfg, _leaf_rng(path, cfg))
+        report.leaves += 1
+        report.total_bits += q_np.size * 8
+        if n:
+            report.faults += n
+            report.per_leaf[jax.tree_util.keystr(path)] = n
+        new_leaves.append(QuantizedLinear(
+            jax.numpy.asarray(faulted), leaf.scale))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), report
+
+
+def protect_tree(clean: Any, faulted: Any, fraction: float = 0.05) -> Any:
+    """Outlier-channel protection: restore the top-``fraction`` output
+    channels (ranked by mean |scale| — where requant amplifies a flipped
+    bit the most, ``err = dq * scale``) of every faulted
+    ``QuantizedLinear`` from the pristine tree.
+
+    Channels are the last axis of ``q`` (the axis the fused kernels emit
+    and every ``scale`` layout reduces onto); the per-channel score
+    averages |scale| over any extra structure axes (heads, experts).
+    Models storing those channels in a protected digital/ECC region.
+    """
+    from repro.quant import QuantizedLinear
+
+    if not 0.0 <= fraction <= 1.0:
+        raise ValueError(f"fraction must be in [0, 1], got {fraction}")
+
+    def is_ql(x):
+        return isinstance(x, QuantizedLinear)
+
+    def protect(c, f):
+        if not is_ql(c):
+            return f
+        n = c.q.shape[-1]
+        n_protect = int(np.ceil(fraction * n))
+        if n_protect == 0:
+            return f
+        scale = np.abs(np.asarray(c.scale, np.float32))
+        if scale.shape and scale.shape[-1] == n:
+            score = scale.reshape(-1, n).mean(axis=0)
+        else:  # scale laid out on other axes (e.g. MoE [E, N] vs q [E,K,N])
+            score = np.full(n, scale.mean(), np.float32)
+        chans = np.argsort(score)[-n_protect:]
+        q = np.array(np.asarray(f.q), copy=True)
+        q[..., chans] = np.asarray(c.q)[..., chans]
+        return QuantizedLinear(jax.numpy.asarray(q), f.scale)
+
+    return jax.tree_util.tree_map(protect, clean, faulted, is_leaf=is_ql)
+
+
+# ---------------------------------------------------------------------------
+# ECC model (SECDED 72,64 — the classic DRAM/SRAM word code)
+# ---------------------------------------------------------------------------
+def ecc_residual_ber(ber: float, data_bits: int = 64,
+                     code_bits: int = 72) -> float:
+    """Residual per-data-bit error rate after in-macro SECDED.
+
+    A (72,64) word corrects any single bit error; a word is uncorrectable
+    when >= 2 of its ``code_bits`` are hit:
+
+        W = 1 - (1-p)^72 - 72 p (1-p)^71
+
+    An uncorrectable word at these rates almost surely carries exactly 2
+    flipped bits, so the residual rate per data bit is ~ ``2 W / 64``
+    (double-error miscorrection noise folded into the same constant).
+    At p = 1e-4 this is ~8e-7 — 2 orders of magnitude suppression; the
+    energy/area price is costed by ``EnergyModel.with_cim_ecc``.
+    """
+    if not 0.0 <= ber <= 1.0:
+        raise ValueError(f"ber must be in [0, 1], got {ber}")
+    p, n = float(ber), code_bits
+    w_ok = (1 - p) ** n + n * p * (1 - p) ** (n - 1)
+    return min(1.0, 2.0 * max(0.0, 1.0 - w_ok) / data_bits)

@@ -1,4 +1,5 @@
 from .engine import EngineStats, Request, ServingEngine
+from .lifecycle import (TERMINAL_STATUSES, EngineStallError, RequestStatus)
 
 
 def __getattr__(name):
@@ -13,4 +14,5 @@ def __getattr__(name):
 
 
 __all__ = ["EngineStats", "Request", "ServingEngine",
+           "RequestStatus", "TERMINAL_STATUSES", "EngineStallError",
            "DiffusionEngine", "ImageRequest", "DiffusionStats"]

@@ -15,22 +15,37 @@ JAX's static shapes):
 
 All step functions are jitted once (static shapes: n_slots x 1 decode,
 1 x prefill_len prefill buckets).
+
+Reliability layer (see docs/architecture.md §8): every request carries a
+terminal :class:`~repro.serving.lifecycle.RequestStatus` instead of a
+bare ``done`` flag, the queue is bounded with typed backpressure
+(``submit`` returns ``REJECTED`` instead of growing unboundedly),
+per-request deadlines expire queued *and* active work, health checks
+fail a slot's request on non-finite logits instead of sampling from
+NaNs, ``run_until_done`` surfaces stalls instead of silently returning,
+and ``drain``/``shutdown`` guarantee every request terminates.  With
+health checks passing and no faults injected the serving behavior is
+bit-identical to the pre-reliability engine (regression-pinned by
+tests/test_reliability.py).
 """
 from __future__ import annotations
 
 import contextlib
-import dataclasses
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .lifecycle import (EngineStallError, LifecycleMixin, RequestStatus,
+                        TERMINAL_STATUSES)
+
 
 @dataclass
-class Request:
+class Request(LifecycleMixin):
     uid: int
     prompt: np.ndarray                  # [prompt_len] int32
     max_new_tokens: int = 32
@@ -38,10 +53,14 @@ class Request:
     top_k: int = 0
     eos_id: Optional[int] = None
     seed: int = 0
+    deadline_s: Optional[float] = None  # TTL from submission (engine clock)
 
-    # filled by the engine
+    # filled by the engine (``done`` is now a derived property:
+    # status in TERMINAL_STATUSES — see serving/lifecycle.py)
     generated: list = field(default_factory=list)
-    done: bool = False
+    status: RequestStatus = RequestStatus.QUEUED
+    error: Optional[str] = None
+    submitted_at: float = 0.0
 
 
 @dataclass
@@ -50,13 +69,22 @@ class EngineStats:
     decode_steps: int = 0
     tokens_out: int = 0
     batch_occupancy: list = field(default_factory=list)
+    # reliability counters (all monotone non-decreasing)
+    submitted: int = 0
+    completed: int = 0          # reached OK
+    failed: int = 0             # reached FAILED
+    rejected: int = 0           # reached REJECTED
+    timed_out: int = 0          # reached TIMED_OUT
+    prefill_failures: int = 0   # health check tripped on prefill logits
 
 
 class ServingEngine:
     def __init__(self, model, params, n_slots: int = 4,
                  max_len: int = 512, prefill_bucket: int = 64,
                  quant_plan=None, quantize_mlp: bool = False,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, max_queue: Optional[int] = None,
+                 degraded: bool = False, health_checks: bool = True,
+                 fault_hook: Optional[Callable] = None, clock=None):
         """``mesh`` (a jax Mesh with a ``model`` axis) serves the
         quant-plan decode path tensor-parallel: quantized weights are
         device_put sharded per their logical axes (q + scale co-sharded
@@ -64,6 +92,27 @@ class ServingEngine:
         under a sharding context, so the fused INT8 pipelines run as
         shard_map'd per-device kernels (quant/tp.py) — bit-identical to
         the unsharded engine, with per-shard dispatch counts unchanged.
+
+        Reliability knobs:
+
+        * ``max_queue`` — bounded admission queue; when full, ``submit``
+          returns a typed ``RequestStatus.REJECTED`` (backpressure)
+          instead of growing unboundedly.
+        * ``degraded`` — trace the step functions under
+          :func:`repro.quant.degraded_mode`: each quantized layer
+          screens its fused output and falls back to the sanitized
+          reference path when non-finite (lax.cond, so the healthy path
+          pays one reduction).
+        * ``health_checks`` — fail a slot's request on non-finite
+          logits (prefill or decode) instead of sampling from NaNs.
+          On finite logits this is a no-op, so the default-on check
+          keeps the fault-free path bit-identical.
+        * ``fault_hook(phase, logits) -> logits | None`` — host-side
+          interception point after every prefill/decode fetch; the
+          chaos harness (reliability/chaos.py) uses it to inject
+          non-finite logits deterministically.
+        * ``clock`` — injectable monotonic clock (seconds) for
+          deadline/TTL accounting; defaults to ``time.monotonic``.
         """
         self.model = model
         self.mesh = mesh
@@ -92,6 +141,12 @@ class ServingEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.bucket = prefill_bucket
+        self.max_queue = max_queue
+        self.degraded = degraded
+        self.health_checks = health_checks
+        self.fault_hook = fault_hook
+        self.closed = False
+        self._clock = clock if clock is not None else time.monotonic
         self.cache = model.init_cache(n_slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
@@ -109,9 +164,23 @@ class ServingEngine:
         from repro.parallel.context import sharding_context
         return sharding_context(self.mesh, self.rules)
 
+    @contextlib.contextmanager
+    def _step_ctx(self):
+        """Trace-time context for the jitted step bodies: sharding plus,
+        when ``degraded`` is set, the quant layer's finite-screen
+        fallback (the context executes while jit traces the body, like
+        the mesh context — so ``degraded`` must be fixed at build)."""
+        with self._mesh_ctx():
+            if self.degraded:
+                from repro.quant import degraded_mode
+                with degraded_mode(True):
+                    yield
+            else:
+                yield
+
     def _build_steps(self):
         model = self.model
-        mesh_ctx = self._mesh_ctx
+        step_ctx = self._step_ctx
 
         @jax.jit
         def prefill_one(params, cache, tokens, slot, length):
@@ -135,7 +204,7 @@ class ServingEngine:
             sub = jax.tree.map(take, cache)
             sub = jax.tree.map(jnp.zeros_like, sub)
             sub = _set_pos_empty(sub)
-            with mesh_ctx():
+            with step_ctx():
                 logits, sub = model.prefill_padded(
                     params, {"inputs": tokens[None]}, sub,
                     jnp.asarray([length], jnp.int32))
@@ -149,7 +218,7 @@ class ServingEngine:
 
         @jax.jit
         def decode_all(params, cache, last_tokens):
-            with mesh_ctx():
+            with step_ctx():
                 logits, cache = model.decode_step(
                     params, {"inputs": last_tokens[:, None]}, cache)
             return logits[:, 0], cache
@@ -158,11 +227,25 @@ class ServingEngine:
         self._decode_all = decode_all
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        """Queue a request, validating it against the engine's bounds.
+    def _finish(self, req: Request, status: RequestStatus,
+                error: Optional[str] = None) -> RequestStatus:
+        """Move ``req`` to a terminal status and book it in the stats."""
+        req.finish(status, error)
+        if status is RequestStatus.OK:
+            self.stats.completed += 1
+        elif status is RequestStatus.FAILED:
+            self.stats.failed += 1
+        elif status is RequestStatus.TIMED_OUT:
+            self.stats.timed_out += 1
+        else:
+            self.stats.rejected += 1
+        return status
 
-        Rejected up front (admission would otherwise fail late or
-        corrupt state silently):
+    def submit(self, req: Request) -> RequestStatus:
+        """Queue a request; returns its (possibly terminal) status.
+
+        Malformed requests raise ``ValueError`` up front (admission
+        would otherwise fail late or corrupt state silently):
 
         * empty prompts — ``_admit`` pads by repeating the final token
           (``prompt[-1]``), which raises IndexError mid-serve on a
@@ -171,74 +254,149 @@ class ServingEngine:
           the prefill write would wrap the ring cache and silently
           overwrite the oldest prompt tokens (and decode needs at least
           one free slot past the prompt).
+
+        Capacity rejections are *typed, not raised*: a closed/draining
+        engine or a full bounded queue returns
+        ``RequestStatus.REJECTED`` (with ``req.error`` set) so callers
+        can apply backpressure without exception plumbing.
         """
         L = len(req.prompt)
         if L == 0:
+            self._finish(req, RequestStatus.REJECTED, "empty prompt")
             raise ValueError("empty prompt: requests must contain at "
                              "least one token")
         padded = L + (-L) % self.bucket
         if padded >= self.max_len:
+            self._finish(req, RequestStatus.REJECTED,
+                         "padded prompt would wrap the ring cache")
             raise ValueError(
                 f"prompt of length {L} pads to the {padded}-token prefill "
                 f"bucket, but max_len={self.max_len}: the ring cache would "
                 f"wrap and silently drop the oldest prompt tokens. Raise "
                 f"max_len (or shrink prefill_bucket) so padded prompts "
                 f"stay strictly below it.")
+        if self.closed:
+            return self._finish(req, RequestStatus.REJECTED,
+                                "engine closed (draining or shut down)")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return self._finish(
+                req, RequestStatus.REJECTED,
+                f"queue full ({self.max_queue} waiting): backpressure")
+        req.status = RequestStatus.QUEUED
+        req.submitted_at = self._clock()
         self.queue.append(req)
+        self.stats.submitted += 1
+        return RequestStatus.QUEUED
 
     def _sample(self, req: Request, logits: np.ndarray, step: int) -> int:
+        """Sample the next token; hardened against non-finite logits.
+
+        On fully-finite rows this is bit-identical to the naive
+        implementation (the non-finite mask is the identity).  Rows the
+        health check did not catch (``health_checks=False``) must still
+        never crash the serve loop: NaN/+inf entries are masked to
+        -inf before softmax/argmax (previously ``p /= p.sum()`` turned
+        an all--inf row into NaN probabilities and ``rng.choice``
+        raised mid-serve), and a row with no finite entry at all
+        deterministically yields token 0.
+        """
+        logits = np.asarray(logits)
+        finite = np.isfinite(logits)
+        if not finite.any():
+            return 0
+        masked = np.where(finite, logits, -np.inf)
         if req.temperature <= 0.0:
-            return int(np.argmax(logits))
+            return int(np.argmax(masked))
         rng = np.random.default_rng((req.seed, req.uid, step))
-        x = logits.astype(np.float64) / req.temperature
+        x = masked.astype(np.float64) / req.temperature
         if req.top_k:
             kth = np.partition(x, -req.top_k)[-req.top_k]
             x = np.where(x < kth, -np.inf, x)
-        p = np.exp(x - x.max())
+        m = x.max()
+        if not np.isfinite(m):        # top-k landed entirely on -inf
+            return int(np.argmax(masked))
+        p = np.exp(x - m)
         p /= p.sum()
         return int(rng.choice(len(p), p=p))
 
+    def _apply_fault_hook(self, phase: str, logits: np.ndarray) -> np.ndarray:
+        if self.fault_hook is None:
+            return logits
+        out = self.fault_hook(phase, logits)
+        return logits if out is None else np.asarray(out)
+
     # ------------------------------------------------------------------
-    def _admit(self) -> None:
-        """Fill free slots from the queue (prefill path)."""
+    def _admit(self, now: float) -> None:
+        """Fill free slots from the queue (prefill path).
+
+        Expired queued requests are purged (TIMED_OUT) and a prefill
+        whose logits fail the health check frees its candidate slot for
+        the next queued request instead of occupying it with a poisoned
+        sequence (the next prefill resets the slot's cache view).
+        """
         for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            L = len(req.prompt)
-            pad = (-L) % self.bucket
-            # pad to the bucket by repeating the final token: keeps the
-            # prefill shape static (one jit trace per bucket count).  The
-            # pad region is masked inside prefill (empty-position
-            # sentinel), so generations are identical to an exact-length
-            # prefill and decode resumes at the true position L.
-            toks = np.concatenate(
-                [req.prompt, np.full(pad, req.prompt[-1])]).astype(np.int32)
-            logits, self.cache = self._prefill_one(
-                self.params, self.cache, jnp.asarray(toks), slot, L)
-            self.stats.prefills += 1
-            nxt = self._sample(req, np.asarray(logits), 0)
-            req.generated.append(nxt)
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = L
-            self.slot_last[slot] = nxt
+            while self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                if req.expired(now):
+                    self._finish(req, RequestStatus.TIMED_OUT,
+                                 "deadline expired while queued")
+                    continue
+                L = len(req.prompt)
+                pad = (-L) % self.bucket
+                # pad to the bucket by repeating the final token: keeps
+                # the prefill shape static (one jit trace per bucket
+                # count).  The pad region is masked inside prefill
+                # (empty-position sentinel), so generations are identical
+                # to an exact-length prefill and decode resumes at the
+                # true position L.
+                toks = np.concatenate(
+                    [req.prompt,
+                     np.full(pad, req.prompt[-1])]).astype(np.int32)
+                logits, self.cache = self._prefill_one(
+                    self.params, self.cache, jnp.asarray(toks), slot, L)
+                self.stats.prefills += 1
+                logits = self._apply_fault_hook("prefill",
+                                                np.asarray(logits))
+                if self.health_checks and not np.isfinite(logits).all():
+                    self.stats.prefill_failures += 1
+                    self._finish(req, RequestStatus.FAILED,
+                                 "non-finite prefill logits")
+                    continue
+                nxt = self._sample(req, logits, 0)
+                req.status = RequestStatus.ACTIVE
+                req.generated.append(nxt)
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = L
+                self.slot_last[slot] = nxt
 
     def _active(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
     def step(self) -> None:
-        """One engine iteration: admit + one batched decode step."""
-        self._admit()
+        """One engine iteration: expire + admit + one batched decode."""
+        now = self._clock()
+        for slot in self._active():
+            req = self.slot_req[slot]
+            if req.expired(now):
+                self._finish(req, RequestStatus.TIMED_OUT,
+                             "deadline expired mid-decode")
+                self.slot_req[slot] = None
+        self._admit(now)
         active = self._active()
         if not active:
             return
         self.stats.batch_occupancy.append(len(active) / self.n_slots)
         last = jnp.asarray(self.slot_last)
         logits, self.cache = self._decode_all(self.params, self.cache, last)
-        logits = np.asarray(logits)
+        logits = self._apply_fault_hook("decode", np.asarray(logits))
         self.stats.decode_steps += 1
         for slot in active:
             req = self.slot_req[slot]
+            if self.health_checks and not np.isfinite(logits[slot]).all():
+                self._finish(req, RequestStatus.FAILED,
+                             "non-finite logits")
+                self.slot_req[slot] = None    # slot freed, cache reset
+                continue                      # on its next prefill
             tok = self._sample(req, logits[slot], len(req.generated))
             req.generated.append(tok)
             self.stats.tokens_out += 1
@@ -247,14 +405,70 @@ class ServingEngine:
             if ((req.eos_id is not None and tok == req.eos_id)
                     or len(req.generated) >= req.max_new_tokens
                     or self.slot_pos[slot] >= self.max_len - 1):
-                req.done = True
+                self._finish(req, RequestStatus.OK)
                 self.slot_req[slot] = None   # slot freed immediately
 
-    def run_until_done(self, max_iters: int = 10_000) -> None:
-        it = 0
-        while (self.queue or self._active()) and it < max_iters:
+    def pending(self) -> int:
+        """Requests not yet terminal: queued + active."""
+        return len(self.queue) + len(self._active())
+
+    def run_until_done(self, max_iters: int = 10_000,
+                       on_stall: str = "raise") -> None:
+        """Step until every request is terminal.
+
+        A stall (``max_iters`` exhausted with work still pending) is
+        never silent: ``on_stall='raise'`` (default) raises
+        :class:`~repro.serving.lifecycle.EngineStallError`;
+        ``on_stall='timeout'`` instead finishes every pending request as
+        ``TIMED_OUT`` and returns — the graceful-drain flavor.
+        """
+        if on_stall not in ("raise", "timeout"):
+            raise ValueError(f"on_stall must be 'raise' or 'timeout', "
+                             f"got {on_stall!r}")
+        for _ in range(max_iters):
+            if not self.pending():
+                return
             self.step()
-            it += 1
+        if not self.pending():
+            return
+        if on_stall == "timeout":
+            self._expire_pending("engine stalled at max_iters")
+            return
+        raise EngineStallError(
+            f"run_until_done hit max_iters={max_iters} with "
+            f"{len(self.queue)} queued and {len(self._active())} active "
+            f"request(s) still pending")
+
+    def _expire_pending(self, why: str) -> None:
+        while self.queue:
+            self._finish(self.queue.popleft(), RequestStatus.TIMED_OUT, why)
+        for slot in self._active():
+            self._finish(self.slot_req[slot], RequestStatus.TIMED_OUT, why)
+            self.slot_req[slot] = None
+
+    def drain(self, max_iters: int = 10_000,
+              on_stall: str = "timeout") -> None:
+        """Graceful drain: stop admitting new work (subsequent ``submit``
+        calls get a typed ``REJECTED``) and run everything already
+        accepted to a terminal status."""
+        self.closed = True
+        self.run_until_done(max_iters, on_stall=on_stall)
+
+    def shutdown(self, drain: bool = True, max_iters: int = 10_000) -> None:
+        """Stop the engine; every pending request reaches a terminal
+        status.  ``drain=True`` finishes accepted work first; ``False``
+        aborts immediately (queued -> REJECTED, active -> FAILED)."""
+        if drain:
+            self.drain(max_iters)
+            return
+        self.closed = True
+        while self.queue:
+            self._finish(self.queue.popleft(), RequestStatus.REJECTED,
+                         "engine shutdown")
+        for slot in self._active():
+            self._finish(self.slot_req[slot], RequestStatus.FAILED,
+                         "engine shutdown with request in flight")
+            self.slot_req[slot] = None
 
 
 def _set_pos_empty(cache):

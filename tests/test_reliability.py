@@ -1,0 +1,697 @@
+"""Reliability-subsystem suite (ISSUE 6 acceptance bars).
+
+Pins, in order: the seeded CIM fault models (determinism, geometry,
+mitigations, ECC math and its simulator costing), degraded-mode
+execution (finite fallback + the default-path jaxpr staying cond-free so
+the dispatch-count pins hold), the hardened ``_sample``, the engine
+request lifecycle (typed backpressure, deadlines on an injected clock,
+health checks, loud stalls, drain/shutdown), the deterministic chaos
+soak at the swept BERs {1e-6, 1e-4, 1e-2} with the engine invariants,
+the fault-free bit-identity regression, property-style invariant sweeps,
+and the DiffusionEngine sharing the same lifecycle.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, get_dit_config, reduced_config
+from repro.models import build_model
+from repro.quant import (QuantizedLinear, QuantPlan, degraded_mode,
+                         quantize_linear, quantize_mlp, quantized_matmul,
+                         quantized_mlp_apply, quantized_moe_apply)
+from repro.reliability import (FaultConfig, chaos_soak, ecc_residual_ber,
+                               engine_invariant_violations, finite_rows,
+                               inject_int8, inject_tree, protect_tree,
+                               tree_finite)
+from repro.serving import (EngineStallError, Request, RequestStatus,
+                           ServingEngine)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced_config(get_config("gemma-2b"))
+    m = build_model(cfg)
+    return cfg, m, m.init(KEY)
+
+
+def _requests(cfg, n, temperature=0.7, deadline_s=None, max_new=None):
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        4 + i % 3).astype(np.int32),
+                    max_new_tokens=max_new or (3 + i % 3),
+                    temperature=temperature, top_k=5, seed=11,
+                    deadline_s=deadline_s)
+            for i in range(n)]
+
+
+# ===========================================================================
+# 1. Fault models
+# ===========================================================================
+class TestFaultModels:
+    Q = np.random.default_rng(0).integers(-127, 128, (256, 384)) \
+        .astype(np.int8)
+
+    def _inject(self, kind, ber, seed=1):
+        return inject_int8(self.Q, FaultConfig(kind=kind, ber=ber, seed=7),
+                           np.random.default_rng(seed))
+
+    @pytest.mark.parametrize("kind,ber", [
+        ("bit_flip", 1e-3), ("stuck_at_0", 1e-3), ("stuck_at_1", 1e-3),
+        ("column_kill", 2e-2)])
+    def test_deterministic_seeded_and_nonempty(self, kind, ber):
+        a, na = self._inject(kind, ber)
+        b, nb = self._inject(kind, ber)
+        assert np.array_equal(a, b) and na == nb and na > 0
+        c, _ = self._inject(kind, ber, seed=2)
+        assert not np.array_equal(a, c)   # a different stream differs
+        z, nz = self._inject(kind, 0.0)
+        assert np.array_equal(z, self.Q) and nz == 0
+        assert np.array_equal(self.Q, TestFaultModels.Q)  # input untouched
+
+    def test_bit_flip_count_scales_with_ber(self):
+        _, lo = self._inject("bit_flip", 1e-4)
+        _, hi = self._inject("bit_flip", 1e-2)
+        assert lo < hi
+        # the faulted-bit count matches the changed-bit population
+        a, n = self._inject("bit_flip", 1e-3)
+        changed = np.bitwise_xor(a.view(np.uint8), self.Q.view(np.uint8))
+        assert int(np.unpackbits(changed).sum()) == n
+
+    def test_stuck_at_only_moves_one_way(self):
+        a0, _ = self._inject("stuck_at_0", 1e-2)
+        # stuck-at-0 can only CLEAR bits: a0's set bits are a subset
+        assert not np.any(np.bitwise_and(
+            a0.view(np.uint8), ~self.Q.view(np.uint8)))
+        a1, _ = self._inject("stuck_at_1", 1e-2)
+        assert not np.any(np.bitwise_and(
+            ~a1.view(np.uint8), self.Q.view(np.uint8)))
+
+    def test_column_kill_geometry(self):
+        cfg = FaultConfig(kind="column_kill", ber=2e-2, seed=7,
+                          tile_k=128, tile_n=256)
+        a, n = inject_int8(self.Q, cfg, np.random.default_rng(1))
+        diff = a != self.Q
+        assert n > 0 and (a[diff] == 0).all()
+        # every faulted (slab, column) cell is zeroed across the WHOLE
+        # 128-row macro slab, not scattered entries
+        for j in np.unique(np.nonzero(diff)[1]):
+            for slab in np.unique(np.nonzero(diff[:, j])[0] // 128):
+                assert (a[slab * 128:(slab + 1) * 128, j] == 0).all()
+
+    def test_invalid_configs_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultConfig(kind="gamma_ray")
+        with pytest.raises(ValueError, match="ber"):
+            FaultConfig(ber=1.5)
+        with pytest.raises(TypeError, match="int8"):
+            inject_int8(self.Q.astype(np.float32), FaultConfig(ber=1e-3),
+                        np.random.default_rng(0))
+
+    def test_from_mxu_geometry(self):
+        from repro.core.hardware import CIMMXUConfig
+        cfg = FaultConfig.from_mxu(CIMMXUConfig(), kind="column_kill")
+        assert cfg.tile_k == 128 and cfg.tile_n == 256
+
+    def test_inject_tree_touches_only_int8_weights(self):
+        rng = np.random.default_rng(3)
+        w = rng.normal(size=(64, 96)).astype(np.float32)
+        tree = {"a": {"up": quantize_linear(jnp.asarray(w)),
+                      "norm": jnp.ones(64)},
+                "b": {"up": quantize_linear(jnp.asarray(w * 2.0))}}
+        ft, rep = inject_tree(tree, FaultConfig(ber=5e-3, seed=3))
+        assert rep.leaves == 2 and rep.faults > 0
+        assert np.array_equal(np.asarray(ft["a"]["norm"]), np.ones(64))
+        for k in ("a", "b"):
+            assert np.array_equal(np.asarray(ft[k]["up"].scale),
+                                  np.asarray(tree[k]["up"].scale))
+            assert not np.array_equal(np.asarray(ft[k]["up"].q),
+                                      np.asarray(tree[k]["up"].q))
+        # per-leaf streams are independent: same-shape leaves differ
+        da = np.asarray(ft["a"]["up"].q) != np.asarray(tree["a"]["up"].q)
+        db = np.asarray(ft["b"]["up"].q) != np.asarray(tree["b"]["up"].q)
+        assert not np.array_equal(da, db)
+        # replayable bit-for-bit
+        ft2, rep2 = inject_tree(tree, FaultConfig(ber=5e-3, seed=3))
+        assert np.array_equal(np.asarray(ft["a"]["up"].q),
+                              np.asarray(ft2["a"]["up"].q))
+        assert rep2.faults == rep.faults
+
+    def test_protect_tree_restores_outlier_channels(self):
+        # channel 5 has a 100x scale: the requant guard must pick it
+        q = np.random.default_rng(0).integers(-127, 128, (32, 8)) \
+            .astype(np.int8)
+        scale = np.full(8, 0.01, np.float32)
+        scale[5] = 1.0
+        clean = {"w": QuantizedLinear(jnp.asarray(q), jnp.asarray(scale))}
+        bad_q = np.zeros_like(q)
+        faulted = {"w": QuantizedLinear(jnp.asarray(bad_q),
+                                        jnp.asarray(scale))}
+        prot = protect_tree(clean, faulted, fraction=1 / 8)
+        got = np.asarray(prot["w"].q)
+        assert np.array_equal(got[:, 5], q[:, 5])        # outlier restored
+        assert (got[:, :5] == 0).all() and (got[:, 6:] == 0).all()
+        full = protect_tree(clean, faulted, fraction=1.0)
+        assert np.array_equal(np.asarray(full["w"].q), q)
+        none = protect_tree(clean, faulted, fraction=0.0)
+        assert np.array_equal(np.asarray(none["w"].q), bad_q)
+
+    def test_ecc_residual_math(self):
+        assert ecc_residual_ber(0.0) == 0.0
+        p = 1e-4
+        w = 1 - (1 - p) ** 72 - 72 * p * (1 - p) ** 71
+        assert ecc_residual_ber(p) == pytest.approx(2 * w / 64)
+        # orders-of-magnitude suppression at realistic rates, monotone
+        assert ecc_residual_ber(1e-4) < 1e-5
+        assert ecc_residual_ber(1e-6) < ecc_residual_ber(1e-4) \
+            < ecc_residual_ber(1e-2)
+
+
+# ===========================================================================
+# 2. ECC energy/area costing (the simulator rows next to the 27.3x point)
+# ===========================================================================
+class TestEccCosting:
+    def test_with_cim_ecc_factors(self):
+        from repro.core import DEFAULT_ENERGY_MODEL as EM
+        ecc = EM.with_cim_ecc()
+        assert ecc.cim_idle_pj == pytest.approx(EM.cim_idle_pj * 72 / 64)
+        assert ecc.cim_weight_write_pj_per_byte > \
+            EM.cim_weight_write_pj_per_byte * 72 / 64
+        # MAC datapath and the digital MXU are untouched
+        assert ecc.cim_mac_active_pj == EM.cim_mac_active_pj
+        assert ecc.digital_idle_pj == EM.digital_idle_pj
+        assert ecc.digital_mac_active_pj == EM.digital_mac_active_pj
+
+    def test_area_overhead_cim_only(self):
+        from repro.core import mxu_area_mm2, tpuv4i_baseline
+        from repro.core.hardware import cim_tpu
+        cim = cim_tpu(8, 8, num_mxus=2)
+        base = tpuv4i_baseline()
+        assert mxu_area_mm2(cim, cim_ecc=True) > mxu_area_mm2(cim)
+        assert mxu_area_mm2(base, cim_ecc=True) == mxu_area_mm2(base)
+
+    def test_simulated_decode_pays_for_ecc(self):
+        """The 27.3x-point decode graph costs strictly more MXU energy
+        under ECC, and the overhead stays small (storage-bounded)."""
+        from repro.configs import get_config
+        from repro.core import DEFAULT_ENERGY_MODEL as EM, simulate_graph
+        from repro.core.bridge import graph_from_config
+        from repro.core.hardware import cim_tpu
+        small = cim_tpu(8, 8, num_mxus=2)
+        g = graph_from_config(get_config("gemma-2b"), 8, 1, 1280,
+                              quant_plan=QuantPlan.full())
+        plain = simulate_graph(small, g).mxu_energy_j
+        ecc = simulate_graph(small, g, em=EM.with_cim_ecc()).mxu_energy_j
+        assert plain < ecc < plain * 72 / 64 * 1.05 + 1e-30
+
+
+# ===========================================================================
+# 3. Degraded-mode execution (kernel/model boundary)
+# ===========================================================================
+class TestDegradedMode:
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(64, 96)).astype(np.float32)
+    X = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+
+    def _bad_mlp(self):
+        qp = quantize_mlp({"up": jnp.asarray(self.W),
+                           "down": jnp.asarray(
+                               self.rng.normal(size=(96, 64))
+                               .astype(np.float32))})
+        up = qp["up"]
+        return {"up": QuantizedLinear(up.q, up.scale.at[0].set(jnp.nan)),
+                "down": qp["down"]}, qp
+
+    def test_matmul_fallback_sanitizes(self):
+        w = quantize_linear(jnp.asarray(self.W))
+        bad = QuantizedLinear(w.q, w.scale.at[3].set(jnp.inf))
+        assert not bool(jnp.isfinite(quantized_matmul(self.X, bad)).all())
+        with degraded_mode(True):
+            out = quantized_matmul(self.X, bad)
+        assert bool(jnp.isfinite(out).all())
+        # the sanitized channel contributes zero, others are untouched
+        ref = quantized_matmul(self.X, w)
+        san = np.asarray(out)
+        assert (san[:, 3] == 0).all()
+        keep = np.delete(np.arange(96), 3)
+        np.testing.assert_array_equal(san[:, keep],
+                                      np.asarray(ref)[:, keep])
+
+    def test_mlp_fallback_finite_and_nan_input_screened(self):
+        bad, good = self._bad_mlp()
+        assert not bool(jnp.isfinite(
+            quantized_mlp_apply(bad, self.X, "gelu")).all())
+        with degraded_mode(True):
+            assert bool(jnp.isfinite(
+                quantized_mlp_apply(bad, self.X, "gelu")).all())
+            # NaN activations (upstream corruption) are screened too
+            x_nan = self.X.at[0, 0].set(jnp.nan)
+            assert bool(jnp.isfinite(
+                quantized_mlp_apply(good, x_nan, "gelu")).all())
+
+    def test_moe_fallback_finite(self):
+        E, K, N = 2, 32, 48
+        w = self.rng.normal(size=(E, K, N)).astype(np.float32)
+        from repro.quant import quantize_moe_experts
+        qp = quantize_moe_experts(
+            {"up": jnp.asarray(w),
+             "down": jnp.asarray(self.rng.normal(size=(E, N, K))
+                                 .astype(np.float32))})
+        bad = dict(qp)
+        bad["up"] = QuantizedLinear(qp["up"].q,
+                                    qp["up"].scale.at[0, 0].set(jnp.nan))
+        x = jnp.asarray(self.rng.normal(size=(E, 4, K)).astype(np.float32))
+        assert not bool(jnp.isfinite(
+            quantized_moe_apply(bad, x, "gelu")).all())
+        with degraded_mode(True):
+            assert bool(jnp.isfinite(
+                quantized_moe_apply(bad, x, "gelu")).all())
+
+    def test_default_path_jaxpr_is_cond_free(self):
+        """Off by default: the screen must not change the traced graph
+        (the per-block dispatch-count pins depend on it)."""
+        _, good = self._bad_mlp()
+        jx = str(jax.make_jaxpr(
+            lambda x: quantized_mlp_apply(good, x, "gelu"))(self.X))
+        assert "cond" not in jx
+        with degraded_mode(True):
+            jx_on = str(jax.make_jaxpr(
+                lambda x: quantized_mlp_apply(good, x, "gelu"))(self.X))
+        assert "cond" in jx_on
+
+    def test_healthy_path_bit_identical_under_degraded(self):
+        _, good = self._bad_mlp()
+        plain = quantized_mlp_apply(good, self.X, "gelu")
+        with degraded_mode(True):
+            deg = quantized_mlp_apply(good, self.X, "gelu")
+        np.testing.assert_array_equal(np.asarray(plain), np.asarray(deg))
+
+    def test_finite_rows_helper(self):
+        logits = np.zeros((3, 5), np.float32)
+        logits[1, 2] = np.nan
+        assert list(finite_rows(logits)) == [True, False, True]
+        assert tree_finite({"a": jnp.ones(3), "q": jnp.zeros(2, jnp.int8)})
+        assert not tree_finite({"a": jnp.array([1.0, jnp.nan])})
+
+
+# ===========================================================================
+# 4. _sample hardening
+# ===========================================================================
+class TestSampleHardening:
+    def _eng(self):
+        class _E:           # _sample is pure host-side: no engine state
+            _sample = ServingEngine._sample
+        return _E()
+
+    def test_all_nan_and_all_neginf_rows_never_crash(self):
+        eng = self._eng()
+        req = Request(uid=0, prompt=np.array([1], np.int32),
+                      temperature=0.8, top_k=2)
+        assert eng._sample(req, np.full(16, np.nan, np.float32), 0) == 0
+        assert eng._sample(req, np.full(16, -np.inf, np.float32), 0) == 0
+        req_g = Request(uid=0, prompt=np.array([1], np.int32))
+        assert eng._sample(req_g, np.full(16, np.nan, np.float32), 0) == 0
+
+    def test_partial_nan_masked_not_sampled(self):
+        eng = self._eng()
+        logits = np.full(16, -5.0, np.float32)
+        logits[3] = np.nan
+        logits[7] = np.inf       # +inf would win argmax; must be masked
+        logits[9] = 2.0
+        greedy = Request(uid=0, prompt=np.array([1], np.int32))
+        assert eng._sample(greedy, logits, 0) == 9
+        temp = Request(uid=1, prompt=np.array([1], np.int32),
+                       temperature=0.5, top_k=4, seed=3)
+        for step in range(8):
+            assert eng._sample(temp, logits, step) not in (3, 7)
+
+    def test_finite_rows_bit_identical_to_naive(self):
+        """On fully-finite logits the hardened sampler must reproduce
+        the original implementation exactly (fault-free bit-identity)."""
+        eng = self._eng()
+        rng = np.random.default_rng(5)
+        for step in range(10):
+            logits = rng.normal(size=64).astype(np.float32) * 4
+            req = Request(uid=2, prompt=np.array([1], np.int32),
+                          temperature=0.7, top_k=8, seed=13)
+            # the pre-hardening algorithm, verbatim
+            r2 = np.random.default_rng((req.seed, req.uid, step))
+            x = logits.astype(np.float64) / req.temperature
+            kth = np.partition(x, -req.top_k)[-req.top_k]
+            x = np.where(x < kth, -np.inf, x)
+            p = np.exp(x - x.max())
+            p /= p.sum()
+            want = int(r2.choice(len(p), p=p))
+            assert eng._sample(req, logits, step) == want
+            greedy = Request(uid=2, prompt=np.array([1], np.int32))
+            assert eng._sample(greedy, logits, step) == int(np.argmax(logits))
+
+
+# ===========================================================================
+# 5. Engine hardening: lifecycle, deadlines, backpressure, health checks
+# ===========================================================================
+class TestEngineHardening:
+    def test_submit_statuses_and_backpressure(self, small_model):
+        cfg, m, params = small_model
+        eng = ServingEngine(m, params, n_slots=1, max_len=32,
+                            prefill_bucket=4, max_queue=2)
+        reqs = _requests(cfg, 4)
+        assert eng.submit(reqs[0]) is RequestStatus.QUEUED
+        assert eng.submit(reqs[1]) is RequestStatus.QUEUED
+        assert eng.submit(reqs[2]) is RequestStatus.REJECTED
+        assert "backpressure" in reqs[2].error and reqs[2].done
+        assert eng.stats.rejected == 1 and eng.stats.submitted == 2
+        # malformed requests still raise (pinned API) AND go terminal
+        bad = Request(uid=9, prompt=np.array([], np.int32))
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit(bad)
+        assert bad.status is RequestStatus.REJECTED
+        eng.run_until_done(max_iters=100)
+        assert reqs[0].ok and reqs[1].ok
+
+    def test_deadline_expires_queued_and_active(self, small_model):
+        cfg, m, params = small_model
+        t = [0.0]
+        eng = ServingEngine(m, params, n_slots=1, max_len=32,
+                            prefill_bucket=4, clock=lambda: t[0])
+        active, queued = _requests(cfg, 2, deadline_s=1.0, max_new=20)
+        eng.submit(active)
+        eng.submit(queued)
+        eng.step()                       # admits `active` only (1 slot)
+        assert active.status is RequestStatus.ACTIVE
+        t[0] = 2.0                       # both deadlines pass
+        eng.step()
+        assert active.status is RequestStatus.TIMED_OUT
+        assert "mid-decode" in active.error
+        assert queued.status is RequestStatus.TIMED_OUT
+        assert "queued" in queued.error
+        assert eng._active() == [] and not eng.queue
+        assert eng.stats.timed_out == 2
+        # a deadline-free request still serves after the expiries
+        late = _requests(cfg, 1)[0]
+        eng.submit(late)
+        eng.run_until_done(max_iters=100)
+        assert late.ok
+
+    def test_run_until_done_stall_is_loud(self, small_model):
+        cfg, m, params = small_model
+        eng = ServingEngine(m, params, n_slots=1, max_len=32,
+                            prefill_bucket=4)
+        req = _requests(cfg, 1, max_new=20)[0]
+        eng.submit(req)
+        with pytest.raises(EngineStallError, match="max_iters=2"):
+            eng.run_until_done(max_iters=2)
+        assert not req.done              # raise leaves work resumable
+        eng.run_until_done(max_iters=0, on_stall="timeout")
+        assert req.status is RequestStatus.TIMED_OUT
+        assert eng._active() == []
+        with pytest.raises(ValueError, match="on_stall"):
+            eng.run_until_done(on_stall="ignore")
+
+    def test_health_check_fails_slot_on_nan_logits(self, small_model):
+        cfg, m, params = small_model
+        hits = {"n": 0}
+
+        def poison_first_decode(phase, logits):
+            if phase == "decode" and hits["n"] == 0:
+                hits["n"] += 1
+                out = logits.copy()
+                out[0, 0] = np.nan       # only slot 0's row
+                return out
+            return None
+
+        eng = ServingEngine(m, params, n_slots=2, max_len=32,
+                            prefill_bucket=4,
+                            fault_hook=poison_first_decode)
+        victim, bystander = _requests(cfg, 2)
+        eng.submit(victim)
+        eng.submit(bystander)
+        eng.run_until_done(max_iters=100)
+        assert victim.status is RequestStatus.FAILED
+        assert victim.error == "non-finite logits"
+        assert bystander.ok              # the batchmate is unharmed
+        assert eng.stats.failed == 1 and eng._active() == []
+
+    def test_health_check_fails_prefill_and_slot_stays_usable(
+            self, small_model):
+        cfg, m, params = small_model
+
+        def poison_first_prefill(phase, logits):
+            if phase == "prefill" and not hasattr(poison_first_prefill,
+                                                  "hit"):
+                poison_first_prefill.hit = True
+                out = logits.copy()
+                out[...] = np.inf
+                return out
+            return None
+
+        eng = ServingEngine(m, params, n_slots=1, max_len=32,
+                            prefill_bucket=4,
+                            fault_hook=poison_first_prefill)
+        first, second = _requests(cfg, 2)
+        eng.submit(first)
+        eng.submit(second)
+        eng.run_until_done(max_iters=100)
+        assert first.status is RequestStatus.FAILED
+        assert eng.stats.prefill_failures == 1
+        assert second.ok                 # the slot was reused cleanly
+
+    def test_drain_and_shutdown(self, small_model):
+        cfg, m, params = small_model
+        eng = ServingEngine(m, params, n_slots=1, max_len=32,
+                            prefill_bucket=4)
+        accepted = _requests(cfg, 2)
+        for r in accepted:
+            eng.submit(r)
+        eng.drain(max_iters=100)
+        assert all(r.ok for r in accepted)
+        late = _requests(cfg, 1)[0]
+        assert eng.submit(late) is RequestStatus.REJECTED
+        assert "closed" in late.error
+        # abrupt shutdown: everything pending goes terminal immediately
+        eng2 = ServingEngine(m, params, n_slots=1, max_len=32,
+                             prefill_bucket=4)
+        r1, r2 = _requests(cfg, 2, max_new=20)
+        eng2.submit(r1)
+        eng2.submit(r2)
+        eng2.step()                      # r1 active, r2 queued
+        eng2.shutdown(drain=False)
+        assert r1.status is RequestStatus.FAILED
+        assert r2.status is RequestStatus.REJECTED
+        assert eng2._active() == [] and not eng2.queue
+
+    def test_finish_is_single_assignment(self):
+        req = Request(uid=0, prompt=np.array([1], np.int32))
+        req.finish(RequestStatus.OK)
+        with pytest.raises(RuntimeError, match="already terminal"):
+            req.finish(RequestStatus.FAILED)
+        with pytest.raises(ValueError, match="terminal"):
+            Request(uid=1, prompt=np.array([1], np.int32)).finish(
+                RequestStatus.ACTIVE)
+
+
+# ===========================================================================
+# 6. Chaos soak + the fault-free bit-identity regression (acceptance)
+# ===========================================================================
+class TestChaosSoak:
+    def _reference_tokens(self, cfg, m, params, **eng_kw):
+        eng = ServingEngine(m, params, n_slots=2, max_len=32,
+                            prefill_bucket=4, **eng_kw)
+        reqs = _requests(cfg, 5)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done(max_iters=200)
+        assert all(r.ok for r in reqs)
+        return [list(r.generated) for r in reqs]
+
+    def test_fault_free_engine_bit_identical(self, small_model):
+        """Acceptance pin: with fault injection disabled, the hardened
+        engine (health checks on, chaos attached but inert) produces
+        bit-identical outputs to a plain serve."""
+        cfg, m, params = small_model
+        want = self._reference_tokens(cfg, m, params)
+        eng = ServingEngine(m, params, n_slots=2, max_len=32,
+                            prefill_bucket=4)
+        reqs = _requests(cfg, 5)
+        res = chaos_soak(eng, reqs, ber=0.0, seed=42, max_iters=200)
+        assert res.healthy, res.violations
+        assert [list(r.generated) for r in reqs] == want
+        assert res.statuses == {"ok": 5}
+
+    @pytest.mark.slow
+    def test_soak_swept_bers(self, small_model):
+        """The headline soak: seeded faults mid-serve at BERs
+        {1e-6, 1e-4, 1e-2} + logit NaN chaos on the INT8 degraded-mode
+        engine — every request terminal, invariants clean, no hangs or
+        raises, and the whole run deterministic."""
+        cfg, m, params = small_model
+        eng = ServingEngine(m, params, n_slots=2, max_len=32,
+                            prefill_bucket=4, quant_plan=QuantPlan.full(),
+                            degraded=True)
+        for ber in (1e-6, 1e-4, 1e-2):
+            reqs = _requests(cfg, 5)
+            res = chaos_soak(eng, reqs, ber=ber, seed=42, period=2,
+                             logit_nan_rate=0.25, max_iters=200)
+            assert res.healthy, res.violations
+            assert all(r.done for r in reqs)
+            assert set(res.statuses) <= {"ok", "failed", "timed_out"}
+            assert res.chaos.weight_injections > 0
+            if ber >= 1e-4:
+                assert res.chaos.bits_faulted > 0
+            # pristine weights restored between sweeps (detach contract)
+            assert tree_finite(eng.params)
+        # deterministic replay of the harshest sweep on a fresh engine
+        eng2 = ServingEngine(m, params, n_slots=2, max_len=32,
+                             prefill_bucket=4, quant_plan=QuantPlan.full(),
+                             degraded=True)
+        for ber in (1e-6, 1e-4, 1e-2):
+            reqs2 = _requests(cfg, 5)
+            res2 = chaos_soak(eng2, reqs2, ber=ber, seed=42, period=2,
+                              logit_nan_rate=0.25, max_iters=200)
+        assert [r.status.value for r in reqs2] == \
+            [r.status.value for r in reqs]
+        assert [list(r.generated) for r in reqs2] == \
+            [list(r.generated) for r in reqs]
+        assert res2.statuses == res.statuses
+
+    @pytest.mark.slow
+    def test_outlier_guard_reduces_corruption(self, small_model):
+        """The per-channel requant guard measurably shrinks weight
+        corruption: with fraction=1.0 every channel is restored, so a
+        soak at brutal BER serves exactly like the fault-free engine."""
+        cfg, m, params = small_model
+        want = self._reference_tokens(cfg, m, params,
+                                      quant_plan=QuantPlan.full())
+        eng = ServingEngine(m, params, n_slots=2, max_len=32,
+                            prefill_bucket=4, quant_plan=QuantPlan.full())
+        reqs = _requests(cfg, 5)
+        res = chaos_soak(eng, reqs, ber=1e-2, seed=42, period=2,
+                         protect_fraction=1.0, max_iters=200)
+        assert res.healthy, res.violations
+        assert [list(r.generated) for r in reqs] == want
+
+
+# ===========================================================================
+# 7. Property-style engine invariants (random interleavings)
+# ===========================================================================
+class TestEngineInvariantProperties:
+    @settings(deadline=None, max_examples=3)
+    @given(n_reqs=st.integers(1, 6), n_slots=st.integers(1, 3),
+           temperature=st.floats(0.0, 1.0), bounded=st.booleans())
+    def test_interleavings_preserve_invariants(self, small_model, n_reqs,
+                                               n_slots, temperature,
+                                               bounded):
+        """Random submit/step interleavings: slot accounting, token
+        conservation, and stats monotonicity hold after EVERY step, not
+        just at quiescence."""
+        cfg, m, params = small_model
+        eng = ServingEngine(m, params, n_slots=n_slots, max_len=32,
+                            prefill_bucket=4,
+                            max_queue=2 if bounded else None)
+        todo = _requests(cfg, n_reqs, temperature=temperature)
+        tracked = []          # every request the engine has been shown
+        prev = dataclasses.asdict(eng.stats)
+        rng = np.random.default_rng(n_reqs * 7 + n_slots)
+        for _ in range(200):
+            if not todo and eng.pending() == 0:
+                break
+            if todo and rng.random() < 0.6:
+                r = todo.pop(0)
+                tracked.append(r)
+                eng.submit(r)     # QUEUED, or REJECTED when bounded+full
+            else:
+                eng.step()
+            cur = dataclasses.asdict(eng.stats)
+            for k, v in cur.items():
+                if isinstance(v, int):
+                    assert v >= prev[k], f"stats.{k} went backwards"
+            prev = cur
+            mid = engine_invariant_violations(eng, tracked)
+            assert mid == [], mid
+        else:
+            pytest.fail("engine failed to quiesce in 200 interleaved steps")
+        assert len(tracked) == n_reqs
+        assert all(r.done for r in tracked)
+        assert engine_invariant_violations(eng, tracked) == []
+
+
+# ===========================================================================
+# 8. DiffusionEngine shares the lifecycle
+# ===========================================================================
+class TestDiffusionLifecycle:
+    def _engine(self, **kw):
+        from repro.diffusion import DiffusionEngine
+        from repro.models.dit import DiTModel
+        cfg = get_dit_config("dit-test")
+        m = DiTModel(cfg)
+        return cfg, DiffusionEngine(m, m.init(KEY), batch_size=2, **kw)
+
+    def test_statuses_and_backpressure(self):
+        from repro.diffusion import ImageRequest
+        cfg, eng = self._engine(max_queue=2)
+        reqs = [ImageRequest(uid=i, label=0, num_steps=1, seed=4)
+                for i in range(3)]
+        assert eng.submit(reqs[0]) is RequestStatus.QUEUED
+        assert eng.submit(reqs[1]) is RequestStatus.QUEUED
+        assert eng.submit(reqs[2]) is RequestStatus.REJECTED
+        assert "backpressure" in reqs[2].error
+        bad = ImageRequest(uid=9, label=-1)
+        with pytest.raises(ValueError):
+            eng.submit(bad)
+        assert bad.status is RequestStatus.REJECTED
+        eng.run_until_done()
+        assert reqs[0].ok and reqs[1].ok
+        assert eng.stats.completed == 2 and eng.stats.rejected == 2
+
+    def test_deadline_and_drain(self):
+        from repro.diffusion import ImageRequest
+        t = [0.0]
+        cfg, eng = self._engine(clock=lambda: t[0])
+        doomed = ImageRequest(uid=0, label=0, num_steps=1, deadline_s=0.5)
+        eng.submit(doomed)
+        t[0] = 1.0
+        eng.step()
+        assert doomed.status is RequestStatus.TIMED_OUT
+        ok = ImageRequest(uid=1, label=0, num_steps=1, seed=4)
+        eng.submit(ok)
+        eng.drain()
+        assert ok.ok and eng.closed
+        late = ImageRequest(uid=2, label=0, num_steps=1)
+        assert eng.submit(late) is RequestStatus.REJECTED
+        assert eng.stats.timed_out == 1
+
+    def test_health_check_fails_nonfinite_latents(self):
+        from repro.diffusion import ImageRequest
+
+        def poison(phase, lat):
+            out = lat.copy()
+            out[0, 0, 0, 0] = np.nan     # first batch row only
+            return out
+
+        cfg, eng = self._engine(fault_hook=poison)
+        victim = ImageRequest(uid=0, label=0, num_steps=1, seed=4)
+        mate = ImageRequest(uid=1, label=1, num_steps=1, seed=4)
+        eng.submit(victim)
+        eng.submit(mate)
+        eng.step()
+        assert victim.status is RequestStatus.FAILED
+        assert victim.error == "non-finite latents"
+        assert victim.latents is None
+        assert mate.ok and np.isfinite(mate.latents).all()
+        assert eng.stats.images_out == 1
+
+    def test_stall_is_loud(self):
+        from repro.diffusion import ImageRequest
+        cfg, eng = self._engine()
+        eng.submit(ImageRequest(uid=0, label=0, num_steps=1))
+        with pytest.raises(EngineStallError):
+            eng.run_until_done(max_iters=0)
+        eng.run_until_done(max_iters=0, on_stall="timeout")
+        assert eng.pending() == 0
