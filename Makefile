@@ -11,15 +11,18 @@
 # `make test-chaos` runs the reliability suite (fault models, degraded
 # mode, and the deterministic chaos soak against the hardened engines)
 # including its slow-marked soak tests.
+# `make test-attn` runs the decode-attention kernel suite (int8-KV,
+# split-KV, ring-buffer edge cases — slow-marked interpret-mode tests
+# included) plus the TP sharded-KV-cache parity test.
 # `make verify` is the pre-push check: fast tests + docs-check + the
-# multi-device TP suite + the DiT suite + the chaos/reliability suite
-# plus a BENCH smoke run (simulator rows only; merges into
+# multi-device TP suite + the attention suite + the DiT suite + the
+# chaos/reliability suite plus a BENCH smoke run (simulator rows only; merges into
 # BENCH_kernels.json without clobbering the kernel rows — a full
 # `make bench` additionally prunes rows for renamed/deleted benches and
 # measures the resilience_ber_* chaos rows).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-tp test-dit test-chaos bench verify docs-check
+.PHONY: test test-fast test-tp test-dit test-chaos test-attn bench verify docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -37,11 +40,16 @@ test-dit:
 test-chaos:
 	$(PY) -m pytest -x -q tests/test_reliability.py
 
+test-attn:
+	$(PY) -m pytest -x -q tests/test_kernels.py -k "DecodeAttention"
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -x -q tests/test_tp.py -k "kv_cache_sharded"
+
 docs-check:
 	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) -m benchmarks.run
 
-verify: test-fast docs-check test-tp test-dit test-chaos
+verify: test-fast docs-check test-tp test-attn test-dit test-chaos
 	$(PY) -m benchmarks.run --skip-kernels

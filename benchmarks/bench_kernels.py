@@ -212,15 +212,34 @@ def bench_kernels():
     rows.append(("kernel_flash_attention", t_fa,
                  f"interp_vs_jnp_ref={t_fa/t_ref:.1f}x (CPU interpreter)"))
 
-    # decode attention: B=4, S=2048 cache
-    qd = jax.random.normal(k1, (4, 2, 4, 64), jnp.float32)
-    kd = jax.random.normal(k2, (4, 2048, 2, 64), jnp.float32)
-    vd = jax.random.normal(k3, (4, 2048, 2, 64), jnp.float32)
-    pos = jnp.broadcast_to(jnp.arange(2048)[None], (4, 2048)).astype(jnp.int32)
-    qp = jnp.full((4,), 2047, jnp.int32)
-    t_dec = _time(lambda *a: ops.decode_attention(*a, block_k=512),
-                  qd, kd, vd, pos, qp)
-    rows.append(("kernel_decode_attention", t_dec, "B4 KV2048 GQA 2x4"))
+    # decode attention: fp vs int8-KV at short and long cache lengths,
+    # plus the explicit split-KV dispatch.  B=4, GQA 2 KV heads x 4
+    # groups, D=64; int8 rows stream the quantized cache + per-head
+    # scale vectors through the same kernel.
+    from repro.models.attention import _quantize_kv
+    for S in (512, 4096):
+        qd = jax.random.normal(k1, (4, 2, 4, 64), jnp.float32)
+        kd = jax.random.normal(k2, (4, S, 2, 64), jnp.float32)
+        vd = jax.random.normal(k3, (4, S, 2, 64), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (4, S)).astype(jnp.int32)
+        qp = jnp.full((4,), S - 1, jnp.int32)
+        t_fp = _time(lambda *a: ops.decode_attention(*a, block_k=512),
+                     qd, kd, vd, pos, qp)
+        rows.append((f"kernel_decode_attn_fp_s{S}", t_fp,
+                     f"B4 KV{S} GQA 2x4 fp32 cache"))
+        kq, ks = _quantize_kv(kd)
+        vq, vs = _quantize_kv(vd)
+        t_q = _time(lambda *a: ops.decode_attention(*a, block_k=512),
+                    qd, kq, vq, pos, qp, ks, vs)
+        rows.append((f"kernel_decode_attn_int8kv_s{S}", t_q,
+                     f"B4 KV{S} GQA 2x4 int8 cache, in-kernel dequant"))
+        if S == 4096:
+            t_sp = _time(
+                lambda *a: ops.decode_attention_splitkv(
+                    *a, block_k=512, n_splits=4),
+                qd, kq, vq, pos, qp, ks, vs)
+            rows.append(("decode_attn_splitkv", t_sp,
+                         f"B4 KV{S} int8 cache, 4-way split-KV + combine"))
 
     # ssd scan
     xs = jax.random.normal(k1, (8, 256, 16), jnp.float32)

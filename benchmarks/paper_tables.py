@@ -265,6 +265,27 @@ def bench_quant_plan_energy():
                      f"{d['digital_bf16']/d['cim_small_int8']:.1f}x"
                      f"(paper 27.3x)"))
 
+    # The int8 KV cache in isolation: the same full plan with and
+    # without ``attn_kv`` at a long decode context, where the KV-cache
+    # GEMVs (ATTN_QK/ATTN_SV) dominate decode MACs.  Costed on the
+    # 2x(8x8) point so the row sits next to the 27.3x headline.
+    def attn_work():
+        import dataclasses
+        cfg = get_config("gemma-2b")
+        full = QuantPlan.full()
+        no_kv = dataclasses.replace(full, attn_kv=False)
+        g_full = graph_from_config(cfg, 8, 1, 8192, quant_plan=full)
+        g_nokv = graph_from_config(cfg, 8, 1, 8192, quant_plan=no_kv)
+        return {
+            "full": simulate_graph(small_cim, g_full).mxu_energy_j,
+            "no_kv": simulate_graph(small_cim, g_nokv).mxu_energy_j,
+        }
+    d, us = _timed(attn_work)
+    rows.append(("quant_plan_energy_attn", us,
+                 f"int8_kv_vs_bf16_kv_full_plan="
+                 f"{d['no_kv']/d['full']:.2f}x "
+                 f"(gemma-2b KV8192 on 2x8x8)"))
+
     # The runnable DiT denoise step under the same accounting: covered
     # matmuls (adaLN modulation + QKV/out-proj/MLP) at the INT8-CIM
     # point, attention/softmax at bf16, CONDITIONING vector ops at the

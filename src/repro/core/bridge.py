@@ -284,9 +284,11 @@ def _plan_layer_coverage(mixer: str, ffn: str) -> dict:
     the simulator costs exactly what apply_plan quantizes: only
     attn/attn_local mixers get quantized projections (MLA stays bf16),
     and a MoE layer's shared expert (OpKind.FFN) follows
-    ``moe_experts`` with the routed experts.  Attention QK/SV (KV-cache
-    GEMVs), softmax, the router, and the LM head are not weight matmuls
-    the plan covers — they stay bf16."""
+    ``moe_experts`` with the routed experts.  Attention QK/SV (the
+    KV-cache GEMVs) follow ``attn_kv``: with the int8 KV cache the
+    flash-decode kernel streams int8 K/V and dequantizes in-kernel, so
+    those GEMVs run at the 8-bit operand width too.  Softmax, the
+    router, and the LM head are not plan-covered — they stay bf16."""
     # local import: quant pulls the Pallas kernel modules, which the
     # simulator core otherwise never needs (callers passing a QuantPlan
     # have already imported repro.quant anyway)
@@ -298,6 +300,9 @@ def _plan_layer_coverage(mixer: str, ffn: str) -> dict:
         cov[OpKind.QKV] = "attn_qkv"
     if "attn_out" in kinds:
         cov[OpKind.PROJ] = "attn_out"
+    if "attn_kv" in kinds:
+        cov[OpKind.ATTN_QK] = "attn_kv"
+        cov[OpKind.ATTN_SV] = "attn_kv"
     if "mlp" in kinds:
         cov[OpKind.FFN] = "mlp"
     if "moe_experts" in kinds:

@@ -33,18 +33,26 @@ The software mirror (cim_gemm.py):
 * ``cim_grouped_gemm_int8`` / ``cim_grouped_gated_gemm_int8`` — the same
   fused pipelines batched over a leading **expert** grid dimension:
   stacked ``[E, T, d]`` capacity buffers against stacked ``[E, K, N]``
-  int8 weights, one (expert, m, n) output tile per grid cell.
+  int8 weights, one (expert, m, n) output tile per grid cell;
+* ``decode_attention`` (decode_attention.py) — flash-decode over the
+  ring-buffer KV cache: online softmax streamed over KV blocks, fp or
+  **int8 cache dequantized in-kernel** (per-head scale vectors ride
+  with the int8 blocks; scales fold outside the dots so the MXU sees
+  integer operands), block-skip lists via scalar prefetch, and a
+  split-KV variant (partial (o, m, l) per split + a small combine
+  dispatch) for long contexts.
 
 Which layers run this pipeline is declared by a ``QuantPlan``
 (repro.quant.plan): ``Model.quantize(params, plan)`` rewrites covered
 weights into QuantizedLinear leaves, and the layer applies dispatch on
 them uniformly.  With the full plan, one decode step of a dense
-attention+MLP block is exactly **5** Pallas dispatches — 1 wide QKV
+attention+MLP block is exactly **6** Pallas dispatches — 1 wide QKV
 (q/k/v concatenated along the output axis, quantize-in-kernel), 1
-out-projection with the residual fused into its epilogue, and 3 for the
-gated MLP (quantize, gated GEMM, down GEMM w/ residual) — previously
-~6 bf16 einsums + 5+ XLA elementwise passes with every intermediate in
-HBM.
+flash-decode attention kernel reading the int8 KV cache (``attn_kv``
+coverage), 1 out-projection with the residual fused into its epilogue,
+and 3 for the gated MLP (quantize, gated GEMM, down GEMM w/ residual)
+— previously ~6 bf16 einsums + 5+ XLA elementwise passes with every
+intermediate in HBM.
 
 MoE expert compute is a **constant** number of dispatches independent of
 the expert count: ``quantized_moe_apply`` runs ONE row-quantize over the
@@ -65,8 +73,10 @@ Tensor parallelism: under a model-axis sharding context the quantized
 apply sites shard_map these same kernels per device (repro.quant.tp) —
 column-parallel QKV/up/gate, row-parallel out-proj/down via
 ``ops.cim_int8_gemm_acc`` partial accumulators psum'd before one
-epilogue, expert-parallel grouped MoE — bit-identical to the unsharded
-pipeline with per-shard dispatch counts unchanged.
+epilogue, expert-parallel grouped MoE, and head-parallel flash-decode
+attention over the ``model``-sharded KV cache (no collectives — softmax
+is per-head) — bit-identical to the unsharded pipeline with per-shard
+dispatch counts unchanged.
 """
 from . import ops, ref
 

@@ -8,9 +8,31 @@ the ring-buffer KV cache; the cache is streamed through VMEM in blocks
 state in scratch.  Per-slot true positions (ring-buffer semantics) drive
 masking, so sliding-window layers work unchanged.
 
-Grid: (B, KH, kv_blocks) — kv innermost.
+Three additions over the plain streaming kernel:
+
+* **int8 KV** — when per-(slot, head) scales are given, K/V stream
+  through VMEM as int8 (half the HBM traffic of the memory-bound decode
+  GEMV) and dequantize *inside* the kernel: the scales factor out of
+  both dots, so ``s = (q . k_q) * k_scale`` and ``o = (p * v_scale) . v_q``
+  — no widened KV block is ever materialized.
+* **block-skip list** — a scalar-prefetched per-(batch, kv-block) keep
+  mask (SMEM, like the zero-capacity-expert skip in the grouped MoE
+  kernel) guards the whole online-softmax step, so KV blocks that are
+  fully masked (entirely beyond ``q_pos``, or entirely outside the
+  sliding window) cost no MXU work.  Skipping is exact: a fully-masked
+  block's probabilities underflow to exactly 0.0 in the streamed kernel
+  too (see ``_block_keep`` for the all-masked-row exception).
+* **split-KV** (flash-decode) — ``decode_attention_splitkv`` runs the
+  KV walk as a 2D grid (splits x blocks-per-split), each split emitting
+  its partial ``(o, m, l)`` softmax state, plus one small combine
+  dispatch.  Long contexts parallelize over cores instead of
+  serializing the kv-block loop.  At ``n_splits=1`` the combine's
+  renormalization terms are exact identities (``exp(0) == 1``), so it
+  matches the single-dispatch kernel bit-for-bit.
+
+Grid: (B, KH, kv_blocks) — kv innermost (splitkv: (B, KH, NS, blocks)).
 q:   [B, KH, G, D]    (GQA groups factored)
-k,v: [B, S, KH, D]
+k,v: [B, S, KH, D]    (bf16/f32, or int8 with [B, S, KH] f32 scales)
 pos: [B, S] int32     (slot positions; 2**30 = empty)
 q_pos: [B] int32      (current decode position)
 out: [B, KH, G, D]
@@ -26,29 +48,46 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+EMPTY_SLOT = 2 ** 30
 
 
-def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, scale: float, window,
-                   n_kv_steps: int):
-    ki = pl.program_id(2)
+def _block_keep(pos: jax.Array, q_pos: jax.Array, window,
+                block_k: int) -> jax.Array:
+    """Per-(batch, kv-block) keep mask [B, nk] int32 for the skip list.
 
-    @pl.when(ki == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    A block is kept iff any of its slots is visible to the query.  One
+    exception: a row with *no* visible slot anywhere (all-empty-sentinel
+    cache) keeps every block — the streamed kernel then reproduces the
+    reference's uniform-softmax output (all logits -1e30) instead of
+    emitting zeros, so skip vs no-skip stays bit-identical in all cases.
+    """
+    B, S = pos.shape
+    nk = S // block_k
+    ok = pos <= q_pos[:, None]
+    if window is not None:
+        ok &= pos > (q_pos[:, None] - window)
+    keep = ok.reshape(B, nk, block_k).any(axis=-1)
+    empty_row = ~keep.any(axis=1, keepdims=True)
+    return (keep | empty_row).astype(jnp.int32)
 
-    b = pl.program_id(0)
-    q = q_ref[0, 0]                        # [G, D]
-    k = k_ref[0]                           # [block_k, 1, D] -> squeeze
-    k = k[:, 0]                            # [block_k, D]
-    v = v_ref[0][:, 0]
-    kpos = pos_ref[0]                      # [block_k]
-    qpos = qpos_ref[b]
 
+def _attend_block(q, k, v, kpos, qpos, m_ref, l_ref, acc_ref, *,
+                  scale: float, window, k_scale=None, v_scale=None):
+    """One online-softmax step over a KV block, updating (m, l, acc).
+
+    q [G, D]; k/v [block_k, D]; kpos [block_k]; scales [block_k] or None
+    (int8 K/V — dequantized here, scales factored out of the dots).
+    """
+    quantized = k_scale is not None
+    if quantized:
+        q = q.astype(jnp.float32)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+                            preferred_element_type=jnp.float32)
+    if quantized:
+        s = s * k_scale[None, :]
+    s = s * scale
     ok = kpos[None, :] <= qpos
     if window is not None:
         ok &= kpos[None, :] > qpos - window
@@ -60,9 +99,37 @@ def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
     m_ref[...] = m_new
+    if quantized:
+        p = p * v_scale[None, :]
     pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     acc_ref[...] = acc_ref[...] * corr + pv
+
+
+def _decode_kernel(qpos_ref, skip_ref, *refs, scale: float, window,
+                   n_kv_steps: int, quantized: bool):
+    if quantized:
+        (q_ref, k_ref, v_ref, pos_ref, ks_ref, vs_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
+    b, ki = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        _attend_block(
+            q_ref[0, 0], k_ref[0][:, 0], v_ref[0][:, 0], pos_ref[0],
+            qpos_ref[b], m_ref, l_ref, acc_ref, scale=scale, window=window,
+            k_scale=None if ks_ref is None else ks_ref[0][:, 0],
+            v_scale=None if vs_ref is None else vs_ref[0][:, 0])
+
+    pl.when(skip_ref[b, ki] > 0)(_step)
 
     @pl.when(ki == n_kv_steps - 1)
     def _finish():
@@ -70,38 +137,211 @@ def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _kv_specs(block_k: int, G: int, D: int, quantized: bool,
+              nk_per_split: int | None = None):
+    """in_specs shared by the single-dispatch and split partial kernels.
+
+    Index maps take the grid indices plus the two prefetched scalar refs
+    (q_pos, skip).  With ``nk_per_split`` the grid is (B, KH, NS, ki)
+    and the maps fold the (split, block) pair into the global kv-block
+    index.  int8 K/V blocks stream through VMEM; their per-slot scale
+    rows ride along as skinny [block_k, 1] f32 blocks.
+    """
+    if nk_per_split is None:
+        def blk(b, h, ki, qp, sk):
+            return ki
+
+        def im_q(b, h, ki, qp, sk):
+            return (b, h, 0, 0)
+    else:
+        def blk(b, h, si, ki, qp, sk):
+            return si * nk_per_split + ki
+
+        def im_q(b, h, si, ki, qp, sk):
+            return (b, h, 0, 0)
+
+    def im_kv(b, h, *rest):
+        return (b, blk(b, h, *rest), h, 0)
+
+    def im_pos(b, h, *rest):
+        return (b, blk(b, h, *rest))
+
+    def im_scale(b, h, *rest):
+        return (b, blk(b, h, *rest), h)
+
+    specs = [
+        pl.BlockSpec((1, 1, G, D), im_q),
+        pl.BlockSpec((1, block_k, 1, D), im_kv),
+        pl.BlockSpec((1, block_k, 1, D), im_kv),
+        pl.BlockSpec((1, block_k), im_pos),
+    ]
+    if quantized:
+        specs += [pl.BlockSpec((1, block_k, 1), im_scale),
+                  pl.BlockSpec((1, block_k, 1), im_scale)]
+    return specs
+
+
 @functools.partial(jax.jit, static_argnames=("window", "block_k",
                                              "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                     pos: jax.Array, q_pos: jax.Array, window=None,
+                     pos: jax.Array, q_pos: jax.Array,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None, window=None,
                      block_k: int = 512,
                      interpret: bool = False) -> jax.Array:
-    """q: [B, KH, G, D]; k/v: [B, S, KH, D]; pos: [B, S]; q_pos: [B]."""
+    """q: [B, KH, G, D]; k/v: [B, S, KH, D]; pos: [B, S]; q_pos: [B].
+
+    ``k_scale``/``v_scale`` [B, S, KH] f32 turn on the int8-KV path
+    (K/V must then be int8).  S must be a multiple of ``block_k`` —
+    ``ops.decode_attention`` pads with the empty-slot sentinel.
+    """
     B, KH, G, D = q.shape
     S = k.shape[1]
     scale = 1.0 / math.sqrt(D)
     block_k = min(block_k, S)
     assert S % block_k == 0
     nk = S // block_k
-    grid = (B, KH, nk)
+    quantized = k_scale is not None
+    skip = _block_keep(pos, q_pos, window, block_k)
 
-    return pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale, window=window,
-                          n_kv_steps=nk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                # q_pos [B]
-            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
-            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
-            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
-            pl.BlockSpec((1, block_k), lambda b, h, ki: (b, ki)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH, nk),
+        in_specs=_kv_specs(block_k, G, D, quantized),
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ki, qp, sk: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, D), jnp.float32),
         ],
+    )
+    operands = (q, k, v, pos) + ((k_scale, v_scale) if quantized else ())
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          n_kv_steps=nk, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
         interpret=interpret,
-    )(q_pos, q, k, v, pos)
+    )(q_pos.astype(jnp.int32), skip, *operands)
+
+
+# ---------------------------------------------------------------------------
+# Split-KV (flash-decode): per-split partial softmax state + tiny combine
+# ---------------------------------------------------------------------------
+def _decode_splitkv_kernel(qpos_ref, skip_ref, *refs, scale: float, window,
+                           n_kv_steps: int, quantized: bool):
+    """Partial kernel: grid (B, KH, NS, blocks-per-split); each split
+    walks its KV slice with the same online-softmax step and emits its
+    raw (o, m, l) state — no division, the combine renormalizes."""
+    if quantized:
+        (q_ref, k_ref, v_ref, pos_ref, ks_ref, vs_ref,
+         o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, pos_ref,
+         o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
+    b, si, ki = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        _attend_block(
+            q_ref[0, 0], k_ref[0][:, 0], v_ref[0][:, 0], pos_ref[0],
+            qpos_ref[b], m_ref, l_ref, acc_ref, scale=scale, window=window,
+            k_scale=None if ks_ref is None else ks_ref[0][:, 0],
+            v_scale=None if vs_ref is None else vs_ref[0][:, 0])
+
+    pl.when(skip_ref[b, si * n_kv_steps + ki] > 0)(_step)
+
+    @pl.when(ki == n_kv_steps - 1)
+    def _finish():
+        o_ref[0, 0, 0] = acc_ref[...]
+        mo_ref[0, 0, 0] = m_ref[...]
+        lo_ref[0, 0, 0] = l_ref[...]
+
+
+def _combine_kernel(o_ref, m_ref, l_ref, out_ref):
+    """Combine dispatch: grid (B, KH); renormalize the NS partial states
+    against the global running max and emit the final output row."""
+    o = o_ref[0, 0]                        # [NS, G, D] f32
+    m = m_ref[0, 0]                        # [NS, G, 1] f32
+    l = l_ref[0, 0]
+    m_g = jnp.max(m, axis=0)               # [G, 1]
+    w = jnp.exp(m - m_g[None])             # [NS, G, 1]
+    l_g = jnp.sum(l * w, axis=0)
+    acc = jnp.sum(o * w, axis=0)           # [G, D]
+    out_ref[0, 0] = (acc / jnp.maximum(l_g, 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "n_splits", "interpret"))
+def decode_attention_splitkv(q: jax.Array, k: jax.Array, v: jax.Array,
+                             pos: jax.Array, q_pos: jax.Array,
+                             k_scale: jax.Array | None = None,
+                             v_scale: jax.Array | None = None, window=None,
+                             block_k: int = 512, n_splits: int = 2,
+                             interpret: bool = False) -> jax.Array:
+    """Flash-decode over ``n_splits`` parallel KV slices + one combine.
+
+    Same contract as :func:`decode_attention`; the kv-block count must
+    divide evenly into ``n_splits``.
+    """
+    B, KH, G, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    assert nk % n_splits == 0, (nk, n_splits)
+    nk_s = nk // n_splits
+    quantized = k_scale is not None
+    skip = _block_keep(pos, q_pos, window, block_k)
+
+    def im_part(b, h, si, ki, qp, sk):
+        return (b, h, si, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH, n_splits, nk_s),
+        in_specs=_kv_specs(block_k, G, D, quantized, nk_per_split=nk_s),
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, D), im_part),
+            pl.BlockSpec((1, 1, 1, G, 1), im_part),
+            pl.BlockSpec((1, 1, 1, G, 1), im_part),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    operands = (q, k, v, pos) + ((k_scale, v_scale) if quantized else ())
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_decode_splitkv_kernel, scale=scale, window=window,
+                          n_kv_steps=nk_s, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KH, n_splits, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, n_splits, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, n_splits, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), skip, *operands)
+
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(B, KH),
+        in_specs=[
+            pl.BlockSpec((1, 1, n_splits, G, D), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, n_splits, G, 1), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, n_splits, G, 1), lambda b, h: (b, h, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(o_part, m_part, l_part)

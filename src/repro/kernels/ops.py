@@ -18,7 +18,9 @@ from .cim_gemm import (cim_gemm_int8, cim_gemm_int8_fused,
                        cim_gemm_int8_fused_qin, cim_gated_gemm_int8,
                        cim_grouped_gemm_int8, cim_grouped_gated_gemm_int8,
                        CORE_K, CORE_N, MAX_FUSED_QUANT_K, MAX_FUSED_QUANT_N)
+from . import decode_attention as _da
 from .decode_attention import decode_attention as _decode_kernel
+from .decode_attention import decode_attention_splitkv as _decode_splitkv
 from .flash_attention import flash_attention as _flash_kernel
 from .online_softmax import online_softmax as _softmax_kernel
 from .ssd_scan import ssd_scan as _ssd_kernel
@@ -386,11 +388,57 @@ def flash_attention(q, k, v, causal=True, window=None, block_q=256,
                          interpret=interpret)
 
 
-def decode_attention(q, k, v, pos, q_pos, window=None, block_k=512,
+def decode_attention(q, k, v, pos, q_pos, k_scale=None, v_scale=None,
+                     window=None, block_k=512, n_splits: int | None = None,
                      interpret: bool | None = None):
+    """Flash-decode over a (possibly int8) ring-buffer KV cache.
+
+    ``k_scale``/``v_scale`` [B, S, KH] f32 turn on the int8-KV path
+    (in-kernel dequant).  ``n_splits`` picks the split-KV mode: None
+    auto-selects (1 below 2048 slots, up to 8 beyond — the combine
+    dispatch only pays for itself once the serial kv-block walk
+    dominates); 1 forces the classic single dispatch.  Pads S up to the
+    kv-block size with empty-slot sentinel positions (self-masking).
+    """
     interpret = _on_cpu() if interpret is None else interpret
-    return _decode_kernel(q, k, v, pos, q_pos, window=window,
-                          block_k=block_k, interpret=interpret)
+    S = k.shape[1]
+    bk = min(block_k, S)
+    pad = -S % bk
+    if pad:
+        k, _ = _pad_to(k, 1, bk)
+        v, _ = _pad_to(v, 1, bk)
+        pos = jnp.pad(pos, ((0, 0), (0, pad)),
+                      constant_values=_da.EMPTY_SLOT)
+        if k_scale is not None:
+            k_scale, _ = _pad_to(k_scale, 1, bk)
+            v_scale, _ = _pad_to(v_scale, 1, bk)
+    if k_scale is None and k.dtype != q.dtype:
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    nk = (S + pad) // bk
+    if n_splits is None:
+        n_splits = 1 if S <= 2048 else max(1, min(8, S // 2048))
+    n_splits = min(n_splits, nk)
+    while nk % n_splits:
+        n_splits -= 1
+    if n_splits > 1:
+        return _decode_splitkv(q, k, v, pos, q_pos, k_scale, v_scale,
+                               window=window, block_k=bk,
+                               n_splits=n_splits, interpret=interpret)
+    return _decode_kernel(q, k, v, pos, q_pos, k_scale, v_scale,
+                          window=window, block_k=bk, interpret=interpret)
+
+
+def decode_attention_splitkv(q, k, v, pos, q_pos, k_scale=None, v_scale=None,
+                             window=None, block_k=512, n_splits=2,
+                             interpret: bool | None = None):
+    """Explicit split-KV entry (partial + combine dispatches even at
+    ``n_splits=1``, where it matches :func:`decode_attention`
+    bit-for-bit — the combine's renormalization is exact identities)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    return _decode_splitkv(q, k, v, pos, q_pos, k_scale, v_scale,
+                           window=window, block_k=min(block_k, k.shape[1]),
+                           n_splits=n_splits, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

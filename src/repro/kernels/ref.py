@@ -135,9 +135,17 @@ def flash_attention_ref(q, k, v, causal=True, window=None):
     return o.reshape(B, Sq, H, D)
 
 
-def decode_attention_ref(q, k, v, pos, q_pos, window=None):
-    """q [B,KH,G,D]; k/v [B,S,KH,D]; pos [B,S]; q_pos [B]."""
+def decode_attention_ref(q, k, v, pos, q_pos, window=None,
+                         k_scale=None, v_scale=None):
+    """q [B,KH,G,D]; k/v [B,S,KH,D]; pos [B,S]; q_pos [B].
+
+    ``k_scale``/``v_scale`` [B,S,KH] f32 dequantize an int8 KV cache
+    (the XLA oracle for the kernel's in-kernel dequant path)."""
     B, KH, G, D = q.shape
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[..., None]
+        v = v.astype(jnp.float32) * v_scale[..., None]
+        q = q.astype(jnp.float32)
     s = jnp.einsum("bhgd,bshd->bhgs", q, k).astype(jnp.float32)
     s = s / math.sqrt(D)
     ok = pos[:, None, None, :] <= q_pos[:, None, None, None]

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.context import shard
-from repro.quant.linear import (QuantizedLinear, quantized_out_proj,
+from repro.quant.linear import (QuantizedLinear, _resolve_use_kernel,
+                                _tp_mesh_for, quantized_out_proj,
                                 quantized_qkv_proj)
 from .layers import Param, apply_rope, linear_param, rmsnorm_apply, scale_param
 
@@ -330,6 +331,39 @@ def _dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale[..., None]
 
 
+def _decode_attention_cached(q, ck, cv, cpos, q_pos, k_scale, v_scale,
+                             window):
+    """One-token decode over the ring cache on the CIM flash-decode
+    kernel (interpret oracle on CPU), TP-sharded over KV heads when an
+    active model mesh divides them — each shard then holds 1/p of the
+    KV cache and runs the kernel on its own heads, no collectives.
+
+    q [B, 1, H, D]; ck/cv [B, S, KH, D] (int8 with [B, S, KH] scales on
+    the quantized path); returns [B, 1, H, D].
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import decode_attention_ref
+    from repro.quant import tp as _tp
+
+    B, _, H, D = q.shape
+    KH = ck.shape[2]
+    q4 = q[:, 0].reshape(B, KH, H // KH, D)
+    use_kernel = _resolve_use_kernel(None)
+    mesh = _tp_mesh_for(KH)
+    if mesh is not None:
+        out4 = _tp.decode_attn(mesh, q4, ck, cv, cpos, q_pos, k_scale,
+                               v_scale, window=window,
+                               use_kernel=use_kernel)
+    elif use_kernel:
+        out4 = kops.decode_attention(q4, ck, cv, cpos, q_pos,
+                                     k_scale=k_scale, v_scale=v_scale,
+                                     window=window)
+    else:
+        out4 = decode_attention_ref(q4, ck, cv, cpos, q_pos, window=window,
+                                    k_scale=k_scale, v_scale=v_scale)
+    return out4.reshape(B, 1, H, D).astype(q.dtype)
+
+
 def attention_apply(
     params: dict,
     x: jax.Array,
@@ -394,21 +428,21 @@ def attention_apply(
         # sentinel; those entries must not consume ring capacity
         valid_len = jnp.sum(positions < 2 ** 29, axis=1).astype(jnp.int32)
         quantized = cache["k"].dtype == jnp.int8
+        cks = cvs = None
         if quantized:
+            # int8 at write time: quantization is fused into the
+            # cache-update site, so the cache never holds widened KV
             kq, ks = _quantize_kv(k)
             vq, vs = _quantize_kv(v)
             ck = _ring_update(cache["k"], kq, idx, valid_len)
             cv = _ring_update(cache["v"], vq, idx, valid_len)
             cks = _ring_update(cache["k_scale"], ks, idx, valid_len)
             cvs = _ring_update(cache["v_scale"], vs, idx, valid_len)
-            k_r = _dequantize_kv(ck, cks).astype(q.dtype)
-            v_r = _dequantize_kv(cv, cvs).astype(q.dtype)
         else:
             ck = _ring_update(cache["k"], k.astype(cache["k"].dtype), idx,
                               valid_len)
             cv = _ring_update(cache["v"], v.astype(cache["v"].dtype), idx,
                               valid_len)
-            k_r, v_r = ck, cv
         cpos = _ring_update(cache["pos"],
                             positions.astype(cache["pos"].dtype), idx,
                             valid_len)
@@ -416,8 +450,23 @@ def attention_apply(
         if quantized:
             new_cache["k_scale"] = cks
             new_cache["v_scale"] = cvs
-        out = dense_attention(q, k_r, v_r, positions, cpos, mask_kind,
-                              window, prefix_len)
+        if S == 1 and mask_kind in ("causal", "sliding", "prefix"):
+            # Single-token decode: the CIM flash-decode kernel streams
+            # the (possibly int8) cache directly — in-kernel dequant,
+            # never a widened KV tensor.  Every cached position is
+            # <= q_pos, so the prefix mask reduces to causal here.
+            out = _decode_attention_cached(
+                q, ck, cv, cpos, positions[:, 0], cks, cvs,
+                window if mask_kind == "sliding" else None)
+        else:
+            # chunked-prefill / multi-token oracle path (XLA dequant)
+            if quantized:
+                k_r = _dequantize_kv(ck, cks).astype(q.dtype)
+                v_r = _dequantize_kv(cv, cvs).astype(q.dtype)
+            else:
+                k_r, v_r = ck, cv
+            out = dense_attention(q, k_r, v_r, positions, cpos, mask_kind,
+                                  window, prefix_len)
     else:
         kv_pos = positions
         if S <= DENSE_SEQ_THRESHOLD:

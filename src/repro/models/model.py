@@ -132,9 +132,11 @@ def block_apply(params: dict, spec: tuple[str, str], cfg: ModelConfig,
 
 
 def block_cache_init(spec: tuple[str, str], cfg: ModelConfig, batch: int,
-                     max_len: int) -> Optional[dict]:
+                     max_len: int,
+                     kv_dtype: Optional[str] = None) -> Optional[dict]:
     mixer, _ = spec
-    kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    kv_dtype = kv_dtype or cfg.kv_cache_dtype
+    kv_dtype = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
     if mixer == "attn":
         return attn_mod.init_kv_cache(batch, max_len, cfg.n_kv_heads,
                                       cfg.head_dim, dtype=kv_dtype)
@@ -155,10 +157,11 @@ def block_cache_init(spec: tuple[str, str], cfg: ModelConfig, batch: int,
 
 
 def block_cache_axes(spec: tuple[str, str],
-                     cfg: Optional[ModelConfig] = None) -> Optional[dict]:
+                     cfg: Optional[ModelConfig] = None,
+                     kv_dtype: Optional[str] = None) -> Optional[dict]:
     mixer, _ = spec
     if mixer in ("attn", "attn_local"):
-        quant = cfg is not None and cfg.kv_cache_dtype == "int8"
+        quant = (kv_dtype or (cfg.kv_cache_dtype if cfg else "")) == "int8"
         return attn_mod.kv_cache_logical_axes(quantized=quant)
     if mixer == "mla":
         return mla_mod.mla_cache_logical_axes()
@@ -505,22 +508,28 @@ class Model:
         return self.quantize(params, QuantPlan.mlp_only())
 
     # -- caches ---------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int, kv_dtype=None):
+        """``kv_dtype="int8"`` overrides ``cfg.kv_cache_dtype`` — the
+        serving engine uses it to store KV int8 when the quant plan
+        covers ``attn_kv`` (quantize fused into the cache-update site,
+        flash-decode dequantizes in-kernel)."""
         caches = {}
         for gi, (spec, count) in enumerate(self.groups):
-            one = block_cache_init(spec, self.cfg, batch, max_len)
+            one = block_cache_init(spec, self.cfg, batch, max_len,
+                                   kv_dtype=kv_dtype)
             caches[f"group_{gi}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a[None], (count, *a.shape)).copy()
                 if hasattr(a, "shape") else a, one)
         return caches
 
-    def abstract_cache(self, batch: int, max_len: int):
-        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+    def abstract_cache(self, batch: int, max_len: int, kv_dtype=None):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len, kv_dtype=kv_dtype))
 
-    def cache_axes(self):
+    def cache_axes(self, kv_dtype=None):
         axes = {}
         for gi, (spec, _) in enumerate(self.groups):
-            one = block_cache_axes(spec, self.cfg)
+            one = block_cache_axes(spec, self.cfg, kv_dtype=kv_dtype)
             axes[f"group_{gi}"] = jax.tree.map(
                 lambda a: ("layers", *a) if isinstance(a, tuple) else a, one,
                 is_leaf=lambda a: isinstance(a, tuple))

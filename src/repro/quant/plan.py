@@ -27,17 +27,27 @@ Pallas pipeline:
                                                  epilogue — diffusion
                                                  blocks only, see
                                                  models/dit.py)
+    ``attn_kv``      decode KV cache + GEMVs    (KV stored int8 at the
+                                                 cache-update site, the
+                                                 flash-decode kernel
+                                                 dequantizes in-kernel;
+                                                 no weights rewritten —
+                                                 this kind covers the
+                                                 cache dtype and the
+                                                 QK/SV attention GEMVs'
+                                                 simulator costing)
 
 :func:`apply_plan` rewrites covered weights into
 :class:`~repro.quant.linear.QuantizedLinear` leaves; the model layers
 (``attention_apply``, ``mlp_apply``, ``moe_apply``) detect those leaves
 and dispatch the fused kernels uniformly — no per-callsite flags.  With
 the full plan, one decode step of a dense attention+MLP block is exactly
-5 Pallas dispatches (1 QKV, 1 out-proj w/ residual, 3 MLP); an MoE block
-adds a constant 3 for ALL routed experts (quantize + grouped gated GEMM
-+ grouped down GEMM — the expert index is a kernel grid dimension, so
-60- or 256-expert layers trace the same kernels as 4-expert ones) plus 3
-for the shared-expert MLP.  The int32 accumulators/int8 intermediates
+6 Pallas dispatches (1 QKV, 1 flash-decode attention over the int8 KV
+cache, 1 out-proj w/ residual, 3 MLP); an MoE block adds a constant 3
+for ALL routed experts (quantize + grouped gated GEMM + grouped down
+GEMM — the expert index is a kernel grid dimension, so 60- or 256-expert
+layers trace the same kernels as 4-expert ones) plus 3 for the
+shared-expert MLP (9 total).  The int32 accumulators/int8 intermediates
 never surface in XLA.  Both dispatch invariants are structurally pinned
 in tests/test_quant.py.
 
@@ -53,7 +63,8 @@ import jax
 from .linear import (QuantizedLinear, quantize_attention, quantize_mlp,
                      quantize_moe_experts)
 
-LAYER_KINDS = ("mlp", "attn_qkv", "attn_out", "moe_experts", "adaln")
+LAYER_KINDS = ("mlp", "attn_qkv", "attn_out", "attn_kv", "moe_experts",
+               "adaln")
 
 # The layer kinds a DiT (diffusion-transformer) block draws on: the adaLN
 # modulation GEMM plus the same attention/MLP projections as a dense LLM
@@ -73,7 +84,7 @@ def covered_kinds(mixer: str, ffn: str) -> tuple[str, ...]:
     """
     kinds: list[str] = []
     if mixer in ("attn", "attn_local"):
-        kinds += ["attn_qkv", "attn_out"]
+        kinds += ["attn_qkv", "attn_out", "attn_kv"]
     if ffn == "dense":
         kinds += ["mlp"]
     elif ffn == "moe":
@@ -93,6 +104,7 @@ class QuantPlan:
     mlp: bool = True
     attn_qkv: bool = True
     attn_out: bool = True
+    attn_kv: bool = True
     moe_experts: bool = True
     adaln: bool = True
 
@@ -112,7 +124,7 @@ class QuantPlan:
         """PR 1 behaviour: only dense-FFN MLPs quantized (the
         ``quantize_mlp=True`` deprecation shim maps here)."""
         return cls(mlp=True, attn_qkv=False, attn_out=False,
-                   moe_experts=False, adaln=False)
+                   attn_kv=False, moe_experts=False, adaln=False)
 
     # -- queries ---------------------------------------------------------
     def covers(self, kind: str) -> bool:

@@ -219,3 +219,39 @@ def grouped_moe(mesh: Mesh, x: jax.Array, qparams: dict, activation: str,
         args.append(expert_counts)
     return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                      out_specs=espec, check_rep=False)(*args)
+
+
+def decode_attn(mesh: Mesh, q: jax.Array, k: jax.Array, v: jax.Array,
+                pos: jax.Array, q_pos: jax.Array,
+                k_scale: jax.Array | None = None,
+                v_scale: jax.Array | None = None, *,
+                window: int | None = None,
+                use_kernel: bool = True) -> jax.Array:
+    """Head-parallel flash-decode over a KV cache sharded on KV heads.
+
+    q [B, KH, G, D] and k/v [B, S, KH, D] (+[B, S, KH] scales on the
+    int8 path) shard on their KV-head axis; pos/q_pos replicate.  Every
+    head's softmax is independent, so each shard runs the *same* decode
+    kernel (or its interpret oracle) on its KH/p heads with no
+    collective at all — the per-shard KV-cache residency drops to
+    1/p of the replicated cache, which is the point: decode attention
+    is memory-bound and the cache is the memory.
+    """
+    def body(ql, kl, vl, posl, qpl, *sc):
+        ks, vs = sc if sc else (None, None)
+        if use_kernel:
+            return kops.decode_attention(ql, kl, vl, posl, qpl,
+                                         k_scale=ks, v_scale=vs,
+                                         window=window)
+        return kref.decode_attention_ref(ql, kl, vl, posl, qpl,
+                                         window=window, k_scale=ks,
+                                         v_scale=vs)
+
+    in_specs = [P(None, TP_AXIS), P(None, None, TP_AXIS),
+                P(None, None, TP_AXIS), P(), P()]
+    args = [q, k, v, pos, q_pos]
+    if k_scale is not None:
+        in_specs += [P(None, None, TP_AXIS), P(None, None, TP_AXIS)]
+        args += [k_scale, v_scale]
+    return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=P(None, TP_AXIS), check_rep=False)(*args)

@@ -147,7 +147,23 @@ class ServingEngine:
         self.fault_hook = fault_hook
         self.closed = False
         self._clock = clock if clock is not None else time.monotonic
-        self.cache = model.init_cache(n_slots, max_len)
+        # a plan covering attn_kv stores the KV cache int8 at write time
+        # (half the decode HBM traffic; the flash-decode kernel
+        # dequantizes in-kernel); the fp cache stays the oracle path
+        self.kv_dtype = ("int8" if quant_plan is not None
+                         and getattr(quant_plan, "attn_kv", False) else None)
+        self.cache = model.init_cache(n_slots, max_len,
+                                      kv_dtype=self.kv_dtype)
+        if mesh is not None:
+            # place the cache per its logical axes: KV heads bind the
+            # model axis (when divisible), so TP decode holds 1/p of
+            # the KV cache per shard instead of replicating it
+            from repro.parallel.sharding import make_shardings
+            self.cache = jax.device_put(
+                self.cache,
+                make_shardings(mesh, self.cache,
+                               model.cache_axes(kv_dtype=self.kv_dtype),
+                               rules))
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
         self.slot_last = np.zeros(n_slots, np.int32)

@@ -26,9 +26,11 @@ class TestBridge:
 
     def test_quant_plan_bits_mirror_execution(self):
         """graph_from_config(quant_plan=...) must cost exactly what
-        apply_plan quantizes: attn/attn_local projections INT8, MLA
-        bf16 (not covered by the kernels), MoE shared experts follow
-        ``moe_experts``, router/head/attention-GEMVs bf16."""
+        apply_plan quantizes: attn/attn_local projections INT8, the
+        KV-cache GEMVs INT8 when ``attn_kv`` covers them (int8 KV
+        streamed through the flash-decode kernel), MLA bf16 (not
+        covered by the kernels), MoE shared experts follow
+        ``moe_experts``, router/head bf16."""
         from repro.quant import QuantPlan
         full = QuantPlan.full()
 
@@ -40,8 +42,21 @@ class TestBridge:
         assert by_kind[OpKind.QKV] == {8}
         assert by_kind[OpKind.PROJ] == {8}
         assert by_kind[OpKind.FFN] == {8}
-        assert by_kind[OpKind.ATTN_QK] == {16}       # KV-cache GEMVs
+        assert by_kind[OpKind.ATTN_QK] == {8}        # int8 KV-cache GEMVs
+        assert by_kind[OpKind.ATTN_SV] == {8}
         assert by_kind[OpKind.LM_HEAD] == {16}
+
+        # attn_kv off: the KV GEMVs fall back to bf16 while the
+        # projections stay covered
+        import dataclasses
+        no_kv = dataclasses.replace(full, attn_kv=False)
+        g = graph_from_config(get_config("gemma-2b"), 4, 1, 512,
+                              quant_plan=no_kv)
+        by_kind = {}
+        for op in g.matmuls:
+            by_kind.setdefault(op.kind, set()).add(op.act_bits)
+        assert by_kind[OpKind.ATTN_QK] == {16}
+        assert by_kind[OpKind.QKV] == {8}
 
         # MLA (deepseek) emits QKV/PROJ kinds but the kernels keep MLA
         # in bf16 — the simulator must agree.

@@ -364,6 +364,178 @@ class TestDecodeAttention:
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                    rtol=2e-5, atol=2e-5)
 
+    # -- int8 KV (in-kernel dequant) ------------------------------------
+    @staticmethod
+    def _rand_kv(B, S, KH, G, D, seed=0):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(k1, (B, KH, G, D), jnp.float32)
+        k = jax.random.normal(k2, (B, S, KH, D), jnp.float32)
+        v = jax.random.normal(k3, (B, S, KH, D), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+        return q, k, v, pos
+
+    @staticmethod
+    def _quant(x):
+        from repro.models.attention import _quantize_kv
+        return _quantize_kv(x)
+
+    @pytest.mark.parametrize("s", [128, 4096])
+    def test_int8_kv_close_to_fp(self, s):
+        """Acceptance bar: int8-KV decode matches the fp oracle within
+        the quantization budget at short AND long contexts (the int8
+        error does not accumulate with S — softmax renormalizes)."""
+        B, KH, G, D = 2, 2, 2, 32
+        q, k, v, pos = self._rand_kv(B, s, KH, G, D)
+        q_pos = jnp.array([s - 1, s // 2], jnp.int32)
+        kq, ks = self._quant(k)
+        vq, vs = self._quant(v)
+        out8 = ops.decode_attention(q, kq, vq, pos, q_pos, k_scale=ks,
+                                    v_scale=vs, block_k=128, n_splits=1,
+                                    interpret=True)
+        fp = ref.decode_attention_ref(q, k, v, pos, q_pos)
+        np.testing.assert_allclose(np.asarray(out8), np.asarray(fp),
+                                   rtol=2e-2, atol=2e-2)
+        # and the kernel's in-kernel dequant matches the XLA dequant
+        # oracle to kernel precision
+        r8 = ref.decode_attention_ref(q, kq, vq, pos, q_pos,
+                                      k_scale=ks, v_scale=vs)
+        np.testing.assert_allclose(np.asarray(out8), np.asarray(r8),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_int8_kv_windowed_vs_ref(self):
+        B, S, KH, G, D = 2, 256, 4, 2, 16
+        q, k, v, pos = self._rand_kv(B, S, KH, G, D, seed=3)
+        q_pos = jnp.array([S - 1, 70], jnp.int32)
+        kq, ks = self._quant(k)
+        vq, vs = self._quant(v)
+        out = ops.decode_attention(q, kq, vq, pos, q_pos, k_scale=ks,
+                                   v_scale=vs, window=50, block_k=64,
+                                   interpret=True)
+        expect = ref.decode_attention_ref(q, kq, vq, pos, q_pos, window=50,
+                                          k_scale=ks, v_scale=vs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    # -- split-KV (flash-decode) ----------------------------------------
+    @pytest.mark.parametrize("quantized", [False, True])
+    def test_splitkv_single_split_bitwise(self, quantized):
+        """Acceptance bar: split-KV at n_splits=1 equals the
+        single-dispatch kernel bit-for-bit (the combine's
+        renormalization terms are exact identities)."""
+        B, S, KH, G, D = 2, 256, 2, 4, 32
+        q, k, v, pos = self._rand_kv(B, S, KH, G, D, seed=1)
+        q_pos = jnp.array([S - 1, S // 3], jnp.int32)
+        sc = {}
+        if quantized:
+            k, sc["k_scale"] = self._quant(k)
+            v, sc["v_scale"] = self._quant(v)
+        base = ops.decode_attention(q, k, v, pos, q_pos, block_k=64,
+                                    n_splits=1, interpret=True, **sc)
+        split = ops.decode_attention_splitkv(q, k, v, pos, q_pos,
+                                             block_k=64, n_splits=1,
+                                             interpret=True, **sc)
+        assert (np.asarray(split) == np.asarray(base)).all()
+
+    @pytest.mark.parametrize("n_splits", [2, 4])
+    def test_splitkv_matches_single_dispatch(self, n_splits):
+        B, S, KH, G, D = 2, 512, 2, 2, 32
+        q, k, v, pos = self._rand_kv(B, S, KH, G, D, seed=2)
+        q_pos = jnp.array([S - 1, S // 2], jnp.int32)
+        base = ops.decode_attention(q, k, v, pos, q_pos, block_k=64,
+                                    n_splits=1, interpret=True)
+        split = ops.decode_attention_splitkv(q, k, v, pos, q_pos,
+                                             block_k=64, n_splits=n_splits,
+                                             interpret=True)
+        np.testing.assert_allclose(np.asarray(split), np.asarray(base),
+                                   rtol=2e-6, atol=2e-6)
+
+    def test_splitkv_auto_dispatch_long_context(self):
+        """ops.decode_attention auto-selects split-KV beyond 2048 slots;
+        result still matches the reference."""
+        B, S, KH, G, D = 1, 4096, 1, 2, 16
+        q, k, v, pos = self._rand_kv(B, S, KH, G, D, seed=4)
+        q_pos = jnp.array([S - 1], jnp.int32)
+        out = ops.decode_attention(q, k, v, pos, q_pos, block_k=512,
+                                   interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    # -- ring-buffer edge cases (pinned against the XLA oracle) ---------
+    def test_all_empty_sentinel_cache(self):
+        """A never-written cache (every slot 2**30) must reproduce the
+        reference's uniform-softmax output, not zeros — the skip list
+        keeps all blocks on all-masked rows."""
+        B, S, KH, G, D = 2, 128, 2, 2, 16
+        q, k, v, _ = self._rand_kv(B, S, KH, G, D, seed=5)
+        pos = jnp.full((B, S), 2 ** 30, jnp.int32)
+        q_pos = jnp.array([0, 7], jnp.int32)
+        out = ops.decode_attention(q, k, v, pos, q_pos, block_k=32,
+                                   interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_window_equals_cache_length(self):
+        B, S, KH, G, D = 2, 128, 2, 2, 16
+        q, k, v, pos = self._rand_kv(B, S, KH, G, D, seed=6)
+        q_pos = jnp.array([S - 1, S - 1], jnp.int32)
+        out = ops.decode_attention(q, k, v, pos, q_pos, window=S,
+                                   block_k=32, interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos, window=S)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_single_valid_token(self):
+        """One written slot, everything else empty: output == that
+        slot's V row exactly (softmax over one logit)."""
+        B, S, KH, G, D = 1, 128, 2, 2, 16
+        q, k, v, _ = self._rand_kv(B, S, KH, G, D, seed=7)
+        pos = jnp.full((B, S), 2 ** 30, jnp.int32).at[:, 5].set(0)
+        q_pos = jnp.array([0], jnp.int32)
+        out = ops.decode_attention(q, k, v, pos, q_pos, block_k=32,
+                                   interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+        want = np.broadcast_to(np.asarray(v)[:, 5][:, :, None, :],
+                               (B, KH, G, D))
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_gqa_groups_with_window(self):
+        """G>1 GQA groups share one KV head under a sliding window."""
+        B, S, KH, G, D = 2, 256, 2, 4, 16
+        q, k, v, pos = self._rand_kv(B, S, KH, G, D, seed=8)
+        q_pos = jnp.array([S - 1, 100], jnp.int32)
+        out = ops.decode_attention(q, k, v, pos, q_pos, window=33,
+                                   block_k=64, interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos, window=33)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    # -- block-skip list ------------------------------------------------
+    def test_block_skip_bitwise_and_coverage(self):
+        """A short sequence in a long ring cache skips the fully-masked
+        tail blocks; skipping is bit-identical to streaming them (the
+        masked probabilities underflow to exactly 0)."""
+        from repro.kernels.decode_attention import _block_keep
+        B, S, KH, G, D = 2, 512, 2, 2, 16
+        q, k, v, pos = self._rand_kv(B, S, KH, G, D, seed=9)
+        q_pos = jnp.array([40, 500], jnp.int32)
+        skip = np.asarray(_block_keep(pos, q_pos, None, 64))
+        assert skip.shape == (B, 8)
+        assert skip[0].sum() == 1 and skip[1].sum() == 8  # tail skipped
+        out = ops.decode_attention(q, k, v, pos, q_pos, block_k=64,
+                                   interpret=True)
+        expect = ref.decode_attention_ref(q, k, v, pos, q_pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+        # sliding window: only the blocks inside the window survive
+        skip_w = np.asarray(_block_keep(pos, q_pos, 64, 64))
+        assert skip_w[1].sum() == 2
+
 
 # ---------------------------------------------------------------------------
 # ssd_scan

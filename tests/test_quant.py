@@ -417,7 +417,7 @@ class TestQuantPlan:
     def test_layer_table(self):
         m, _ = self._model()
         rows = QuantPlan.full().layer_table(m.groups)
-        assert rows[0]["fused"] == ["attn_qkv", "attn_out", "mlp"]
+        assert rows[0]["fused"] == ["attn_qkv", "attn_out", "attn_kv", "mlp"]
         assert QuantPlan.none().layer_table(m.groups)[0]["fused"] == []
         assert "int8[" in QuantPlan.full().describe(m.groups)
 
@@ -431,11 +431,12 @@ class TestQuantPlan:
         b, _, _ = m.forward(shim, x)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
-    def test_full_plan_decode_is_five_fused_dispatches(self):
+    def test_full_plan_decode_is_six_fused_dispatches(self):
         """Acceptance bar: one decode step of a dense attention+MLP block
-        executes exactly 5 fused Pallas GEMM-pipeline dispatches — 1 QKV
-        (quantize-in-kernel), 1 out-proj with fused residual, 3 MLP
-        (quantize + gated GEMM + down GEMM w/ residual) — with no
+        executes exactly 6 fused Pallas dispatches — its ENTIRE compute,
+        attention included: 1 QKV (quantize-in-kernel), 1 flash-decode
+        attention over the KV cache, 1 out-proj with fused residual,
+        3 MLP (quantize + gated GEMM + down GEMM w/ residual) — with no
         int32/f32 GEMM intermediates: no kernel emits int32 to HBM and
         no XLA dot_general consumes int8.  Structural on the jaxpr — no
         kernel execution."""
@@ -450,12 +451,13 @@ class TestQuantPlan:
                                                         cache)
         kernels = [e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
                    if e.primitive.name == "pallas_call"]
-        assert len(kernels) == 5, [k.outvars for k in kernels]
+        assert len(kernels) == 6, [k.outvars for k in kernels]
         for k in kernels:
             assert all(v.aval.dtype != jnp.int32 for v in k.outvars)
         # int8 tensors live only between pallas kernels, never in XLA
         # GEMMs; f32 GEMM outputs exist only as final fused-epilogue
-        # emissions (QKV, out-proj, down-proj)
+        # emissions (QKV, out-proj, down-proj — the attention kernel
+        # emits at the activation dtype)
         xla_int8_dots = [
             e for e in iter_jaxpr_eqns(jaxpr.jaxpr, into_pallas=False)
             if e.primitive.name == "dot_general"
@@ -491,11 +493,12 @@ class TestQuantPlan:
     def test_full_plan_moe_decode_dispatches_constant_in_experts(self):
         """Acceptance bar: a full-plan MoE-block decode step pins expert
         compute at a constant number of Pallas dispatches independent of
-        the expert count — 8 per block: 1 QKV + 1 out-proj (w/ residual)
-        + 3 for ALL routed experts (quantize + grouped gated GEMM +
-        grouped down GEMM, expert index a kernel grid dim) + 3 for the
-        shared-expert MLP.  The per-expert loop this replaces traced
-        3·E + 5 kernels.  Structural on the jaxpr — no execution."""
+        the expert count — 9 per block: 1 QKV + 1 flash-decode attention
+        + 1 out-proj (w/ residual) + 3 for ALL routed experts (quantize +
+        grouped gated GEMM + grouped down GEMM, expert index a kernel
+        grid dim) + 3 for the shared-expert MLP.  The per-expert loop
+        this replaces traced 3·E + 6.  Structural on the jaxpr — no
+        execution."""
         import dataclasses
         from repro.configs import get_config, reduced_config
         from repro.models import build_model
@@ -515,4 +518,4 @@ class TestQuantPlan:
                         qparams, batch, cache)
             counts[E] = len([e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
                              if e.primitive.name == "pallas_call"])
-        assert counts[4] == counts[16] == 8, counts
+        assert counts[4] == counts[16] == 9, counts

@@ -174,9 +174,10 @@ class TestTPParity:
 class TestTPStructure:
     def test_per_shard_dispatch_counts_pinned(self):
         """Acceptance bar: under a 2-way model mesh the per-shard Pallas
-        dispatch count of a full-plan decode block is unchanged — 5 for
-        a dense block, 8 for a MoE block (structural on the jaxpr,
-        recursing through the shard_map body; no execution)."""
+        dispatch count of a full-plan decode block is unchanged — 6 for
+        a dense block (attention included), 9 for a MoE block
+        (structural on the jaxpr, recursing through the shard_map body;
+        no execution)."""
         out = _run_subprocess("""
             import jax, jax.numpy as jnp
             from repro.configs import get_config, reduced_config
@@ -194,7 +195,7 @@ class TestTPStructure:
                             yield from iter_eqns(v)
 
             mesh = jax.make_mesh((2,), ("model",))
-            for arch, expect in (("gemma-2b", 5), ("qwen2-moe-a2.7b", 8)):
+            for arch, expect in (("gemma-2b", 6), ("qwen2-moe-a2.7b", 9)):
                 cfg = reduced_config(get_config(arch))
                 m = build_model(cfg)
                 qparams = m.quantize(m.init(jax.random.PRNGKey(0)),
@@ -210,8 +211,8 @@ class TestTPStructure:
                 assert n == expect, (arch, n)
                 print(arch, "DISPATCHES", n)
         """)
-        assert "gemma-2b DISPATCHES 5" in out
-        assert "qwen2-moe-a2.7b DISPATCHES 8" in out
+        assert "gemma-2b DISPATCHES 6" in out
+        assert "qwen2-moe-a2.7b DISPATCHES 9" in out
 
 
 class TestTPEngine:
@@ -258,3 +259,57 @@ class TestTPEngine:
             print("ENGINE_TP_OK")
         """)
         assert "ENGINE_TP_OK" in out
+
+    @pytest.mark.slow
+    def test_kv_cache_sharded_decode_parity(self):
+        """Acceptance bar: TP decode at 2/4-way meshes runs with the
+        int8 KV cache *sharded* over KV heads (per-shard KV memory is
+        1/p of the replicated cache — decode attention is memory-bound
+        and the cache is the memory), head-parallel flash-decode with no
+        collectives, and generations equal to the unsharded engine."""
+        out = _run_subprocess("""
+            import dataclasses
+            import jax, numpy as np
+            from repro.configs import get_config, reduced_config
+            from repro.models import build_model
+            from repro.quant import QuantPlan
+            from repro.serving import Request, ServingEngine
+
+            # 4 KV heads so 2- and 4-way model meshes divide them
+            cfg = dataclasses.replace(reduced_config(get_config("gemma-2b")),
+                                      n_kv_heads=4)
+            m = build_model(cfg)
+            params = m.init(jax.random.PRNGKey(0))
+            rng = np.random.default_rng(1)
+            prompts = [rng.integers(0, cfg.vocab, 4 + i).astype(np.int32)
+                       for i in range(3)]
+
+            def run(mesh):
+                eng = ServingEngine(m, params, n_slots=2, max_len=64,
+                                    prefill_bucket=8,
+                                    quant_plan=QuantPlan.full(), mesh=mesh)
+                reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
+                        for i, p in enumerate(prompts)]
+                for r in reqs:
+                    eng.submit(r)
+                eng.run_until_done(max_iters=100)
+                return [r.generated for r in reqs], eng
+
+            base, eng0 = run(None)
+            assert eng0.kv_dtype == "int8"      # plan covers attn_kv
+            for p in (2, 4):
+                mesh = jax.make_mesh((p,), ("model",))
+                gens, eng = run(mesh)
+                assert gens == base, (p, gens, base)
+                ck = eng.cache["group_0"]["k"]
+                # [layers, slots, kv_seq, kv_heads, D] — heads on model
+                assert ck.dtype == jax.numpy.int8
+                assert tuple(ck.sharding.spec)[3] == "model", \
+                    ck.sharding.spec
+                shard_shape = ck.addressable_shards[0].data.shape
+                assert shard_shape[3] == 4 // p, shard_shape
+                ks = eng.cache["group_0"]["k_scale"]
+                assert tuple(ks.sharding.spec)[3] == "model"
+                print("KV_SHARD_OK", p)
+        """)
+        assert "KV_SHARD_OK 2" in out and "KV_SHARD_OK 4" in out
