@@ -14,15 +14,20 @@
 # `make test-attn` runs the decode-attention kernel suite (int8-KV,
 # split-KV, ring-buffer edge cases — slow-marked interpret-mode tests
 # included) plus the TP sharded-KV-cache parity test.
+# `make test-serving` runs the serving suite: block-allocator property
+# tests, the paged flash-decode bit-identity pins, both continuous-
+# batching engines (ring + paged), and the traffic-harness checks.
 # `make verify` is the pre-push check: fast tests + docs-check + the
-# multi-device TP suite + the attention suite + the DiT suite + the
-# chaos/reliability suite plus a BENCH smoke run (simulator rows only; merges into
+# multi-device TP suite + the attention suite + the serving suite +
+# the DiT suite + the
+# chaos/reliability suite plus a BENCH smoke run (simulator + serving
+# rows; merges into
 # BENCH_kernels.json without clobbering the kernel rows — a full
 # `make bench` additionally prunes rows for renamed/deleted benches and
 # measures the resilience_ber_* chaos rows).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-tp test-dit test-chaos test-attn bench verify docs-check
+.PHONY: test test-fast test-tp test-dit test-chaos test-attn test-serving bench verify docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -45,11 +50,14 @@ test-attn:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PY) -m pytest -x -q tests/test_tp.py -k "kv_cache_sharded"
 
+test-serving:
+	$(PY) -m pytest -x -q tests/test_serving.py
+
 docs-check:
 	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) -m benchmarks.run
 
-verify: test-fast docs-check test-tp test-attn test-dit test-chaos
+verify: test-fast docs-check test-tp test-attn test-serving test-dit test-chaos
 	$(PY) -m benchmarks.run --skip-kernels

@@ -52,6 +52,11 @@ def main() -> None:
     for bench in ALL_BENCHES:
         rows.extend(bench())
     rows.extend(bench_explore_graph_cache())
+    # serving traffic harness: smoke N always (so the serving_* rows
+    # survive the full-run prune and verify exercises the engine loop),
+    # thousand-request sweep on full runs
+    from benchmarks.bench_serving import bench_serving
+    rows.extend(bench_serving(full=not args.skip_kernels))
     if not args.skip_kernels:
         from benchmarks.bench_kernels import bench_kernels
         rows.extend(bench_kernels())

@@ -51,24 +51,30 @@ NEG_INF = -1e30
 EMPTY_SLOT = 2 ** 30
 
 
-def _block_keep(pos: jax.Array, q_pos: jax.Array, window,
-                block_k: int) -> jax.Array:
-    """Per-(batch, kv-block) keep mask [B, nk] int32 for the skip list.
+def _keep_blocks(posb: jax.Array, q_pos: jax.Array, window) -> jax.Array:
+    """Keep mask [B, nk] int32 from per-block positions [B, nk, block_k].
 
     A block is kept iff any of its slots is visible to the query.  One
     exception: a row with *no* visible slot anywhere (all-empty-sentinel
     cache) keeps every block — the streamed kernel then reproduces the
     reference's uniform-softmax output (all logits -1e30) instead of
     emitting zeros, so skip vs no-skip stays bit-identical in all cases.
+    Shared by the ring (contiguous reshape) and paged (block-table
+    gather) kernels so their skip decisions agree on equivalent layouts.
     """
-    B, S = pos.shape
-    nk = S // block_k
-    ok = pos <= q_pos[:, None]
+    ok = posb <= q_pos[:, None, None]
     if window is not None:
-        ok &= pos > (q_pos[:, None] - window)
-    keep = ok.reshape(B, nk, block_k).any(axis=-1)
+        ok &= posb > (q_pos[:, None, None] - window)
+    keep = ok.any(axis=-1)
     empty_row = ~keep.any(axis=1, keepdims=True)
     return (keep | empty_row).astype(jnp.int32)
+
+
+def _block_keep(pos: jax.Array, q_pos: jax.Array, window,
+                block_k: int) -> jax.Array:
+    """Per-(batch, kv-block) keep mask [B, nk] for a contiguous cache."""
+    B, S = pos.shape
+    return _keep_blocks(pos.reshape(B, S // block_k, block_k), q_pos, window)
 
 
 def _attend_block(q, k, v, kpos, qpos, m_ref, l_ref, acc_ref, *,
@@ -345,3 +351,91 @@ def decode_attention_splitkv(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
         interpret=interpret,
     )(o_part, m_part, l_part)
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) flash-decode: same online-softmax walk, but each KV
+# block is fetched through a scalar-prefetched per-sequence block table
+# instead of a contiguous slice — the kernel side of the paged KV cache
+# (serving/paged_cache.py).  Pools are sequence-free: [NB, bs, KH, D].
+# ---------------------------------------------------------------------------
+def _decode_paged_kernel(qpos_ref, skip_ref, bt_ref, *refs, scale: float,
+                         window, n_kv_steps: int, quantized: bool):
+    """The block table is consumed by the index maps only (it routes the
+    DMA); the kernel body is exactly the ring kernel's — that shared body
+    plus a shared skip mask is what makes paged == ring bit-identical on
+    equivalent layouts."""
+    del bt_ref
+    _decode_kernel(qpos_ref, skip_ref, *refs, scale=scale, window=window,
+                   n_kv_steps=n_kv_steps, quantized=quantized)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pos_pages: jax.Array,
+                           block_tables: jax.Array, q_pos: jax.Array,
+                           k_scale_pages: jax.Array | None = None,
+                           v_scale_pages: jax.Array | None = None,
+                           window=None, interpret: bool = False) -> jax.Array:
+    """q: [B, KH, G, D]; k/v pools: [NB, bs, KH, D]; pos_pages: [NB, bs];
+    block_tables: [B, nb] int32 (physical block per logical block; 0 is
+    the reserved null block, kept all-empty so unallocated table entries
+    self-mask); q_pos: [B].
+
+    ``k_scale_pages``/``v_scale_pages`` [NB, bs, KH] f32 turn on the
+    int8-KV path (pools must then be int8).  Grid (B, KH, nb): block ki
+    of row b streams pool block ``block_tables[b, ki]`` via the
+    scalar-prefetched table, runs the ring kernel's online-softmax step,
+    and the skip list (computed from the gathered per-block positions)
+    elides fully-masked blocks exactly as on the ring path.
+    """
+    B, KH, G, D = q.shape
+    bs = pos_pages.shape[1]
+    nb = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    quantized = k_scale_pages is not None
+    bt = block_tables.astype(jnp.int32)
+    skip = _keep_blocks(pos_pages[bt], q_pos, window)
+
+    def im_q(b, h, ki, qp, sk, bt):
+        return (b, h, 0, 0)
+
+    def im_kv(b, h, ki, qp, sk, bt):
+        return (bt[b, ki], 0, h, 0)
+
+    def im_pos(b, h, ki, qp, sk, bt):
+        return (bt[b, ki], 0)
+
+    def im_scale(b, h, ki, qp, sk, bt):
+        return (bt[b, ki], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), im_q),
+        pl.BlockSpec((1, bs, 1, D), im_kv),
+        pl.BlockSpec((1, bs, 1, D), im_kv),
+        pl.BlockSpec((1, bs), im_pos),
+    ]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bs, 1), im_scale),
+                     pl.BlockSpec((1, bs, 1), im_scale)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KH, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, D), im_q),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    operands = (q, k_pages, v_pages, pos_pages) \
+        + ((k_scale_pages, v_scale_pages) if quantized else ())
+    return pl.pallas_call(
+        functools.partial(_decode_paged_kernel, scale=scale, window=window,
+                          n_kv_steps=nb, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), skip, bt, *operands)

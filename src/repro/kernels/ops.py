@@ -429,6 +429,30 @@ def decode_attention(q, k, v, pos, q_pos, k_scale=None, v_scale=None,
                           window=window, block_k=bk, interpret=interpret)
 
 
+def decode_attention_paged(q, k_pages, v_pages, pos_pages, block_tables,
+                           q_pos, k_scale_pages=None, v_scale_pages=None,
+                           window=None, interpret: bool | None = None):
+    """Flash-decode over a paged (block-table) KV cache.
+
+    Pools [NB, bs, KH, D] hold fixed-size KV blocks shared by all
+    sequences; ``block_tables`` [B, nb] int32 maps each row's logical
+    blocks to physical pool blocks (0 = the reserved all-empty null
+    block).  ``k_scale_pages``/``v_scale_pages`` [NB, bs, KH] f32 turn
+    on the int8-KV path (in-kernel dequant).  Bit-identical to
+    :func:`decode_attention` at ``block_k == bs`` on equivalent layouts
+    (same online-softmax body, same skip mask — pinned in
+    tests/test_serving.py).
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    if k_scale_pages is None and k_pages.dtype != q.dtype:
+        k_pages = k_pages.astype(q.dtype)
+        v_pages = v_pages.astype(q.dtype)
+    return _da.decode_attention_paged(
+        q, k_pages, v_pages, pos_pages, block_tables, q_pos,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        window=window, interpret=interpret)
+
+
 def decode_attention_splitkv(q, k, v, pos, q_pos, k_scale=None, v_scale=None,
                              window=None, block_k=512, n_splits=2,
                              interpret: bool | None = None):

@@ -313,6 +313,51 @@ def _ring_update(buf: jax.Array, new: jax.Array, idx: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Paged (block-table) cache update
+# ---------------------------------------------------------------------------
+def _paged_update(pool: jax.Array, new: jax.Array, block_tables: jax.Array,
+                  idx: jax.Array, valid_len: Optional[jax.Array] = None
+                  ) -> jax.Array:
+    """Write ``new`` (S entries starting at logical position ``idx[b]``
+    per batch row) into a shared block pool through per-row block tables.
+
+    pool [NB, bs, ...]; new [B, S, ...]; block_tables [B, nb] int32;
+    idx [B].  Position p lands in pool block ``block_tables[b, p//bs]``
+    at offset ``p % bs``.  Invalid writes — pad entries beyond
+    ``valid_len``, positions past the table (sentinel-index rows), or
+    entries whose logical block is unallocated (table entry 0, the
+    reserved null block) — are routed out of range and dropped, so the
+    null block stays pristine and rows never write through a stale or
+    foreign table entry.  Blocks are sequence-exclusive, so valid writes
+    never collide across rows.
+    """
+    NB, bs = pool.shape[0], pool.shape[1]
+    B, S = new.shape[0], new.shape[1]
+    nb = block_tables.shape[1]
+    p = idx[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)[None]
+    logical = p // bs
+    offs = p % bs
+    safe_logical = jnp.clip(logical, 0, nb - 1)
+    phys = jnp.take_along_axis(block_tables.astype(jnp.int32), safe_logical,
+                               axis=1)
+    invalid = (logical >= nb) | (logical < 0) | (phys <= 0)
+    if valid_len is not None:
+        invalid |= jnp.arange(S, dtype=jnp.int32)[None] >= valid_len[:, None]
+    phys = jnp.where(invalid, NB, phys)       # out of range -> dropped
+    return pool.at[phys, offs].set(new.astype(pool.dtype), mode="drop")
+
+
+def _gather_paged(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Gather a row-linear [B, nb*bs, ...] view of a block pool (the
+    multi-token/chunked-prefill oracle path; unallocated table entries
+    read the all-empty null block and self-mask)."""
+    B, nb = block_tables.shape
+    bs = pool.shape[1]
+    g = pool[block_tables.astype(jnp.int32)]
+    return g.reshape(B, nb * bs, *pool.shape[2:])
+
+
+# ---------------------------------------------------------------------------
 # Full module apply
 # ---------------------------------------------------------------------------
 DENSE_SEQ_THRESHOLD = 2048
@@ -362,6 +407,86 @@ def _decode_attention_cached(q, ck, cv, cpos, q_pos, k_scale, v_scale,
         out4 = decode_attention_ref(q4, ck, cv, cpos, q_pos, window=window,
                                     k_scale=k_scale, v_scale=v_scale)
     return out4.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def _decode_attention_paged_cached(q, ck, cv, cpos, bt, q_pos, k_scale,
+                                   v_scale, window):
+    """One-token decode over the paged (block-table) cache: same kernel/
+    oracle/TP dispatch as :func:`_decode_attention_cached`, with the KV
+    pools streamed through the scalar-prefetched block table.
+
+    q [B, 1, H, D]; pools [NB, bs, KH, D] (int8 with [NB, bs, KH] scales
+    on the quantized path); bt [B, nb]; returns [B, 1, H, D].
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import decode_attention_paged_ref
+    from repro.quant import tp as _tp
+
+    B, _, H, D = q.shape
+    KH = ck.shape[2]
+    q4 = q[:, 0].reshape(B, KH, H // KH, D)
+    use_kernel = _resolve_use_kernel(None)
+    mesh = _tp_mesh_for(KH)
+    if mesh is not None:
+        out4 = _tp.decode_attn_paged(mesh, q4, ck, cv, cpos, bt, q_pos,
+                                     k_scale, v_scale, window=window,
+                                     use_kernel=use_kernel)
+    elif use_kernel:
+        out4 = kops.decode_attention_paged(q4, ck, cv, cpos, bt, q_pos,
+                                           k_scale_pages=k_scale,
+                                           v_scale_pages=v_scale,
+                                           window=window)
+    else:
+        out4 = decode_attention_paged_ref(q4, ck, cv, cpos, bt, q_pos,
+                                          window=window,
+                                          k_scale_pages=k_scale,
+                                          v_scale_pages=v_scale)
+    return out4.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def _paged_cache_apply(cache, k, v, positions, q, mask_kind, window,
+                       prefix_len):
+    """Cache write + attend for a paged (block-table) cache dict."""
+    idx = cache["index"]
+    bt = cache["block_tables"]
+    S = positions.shape[1]
+    valid_len = jnp.sum(positions < 2 ** 29, axis=1).astype(jnp.int32)
+    quantized = cache["k_pages"].dtype == jnp.int8
+    cks = cvs = None
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = _paged_update(cache["k_pages"], kq, bt, idx, valid_len)
+        cv = _paged_update(cache["v_pages"], vq, bt, idx, valid_len)
+        cks = _paged_update(cache["k_scale_pages"], ks, bt, idx, valid_len)
+        cvs = _paged_update(cache["v_scale_pages"], vs, bt, idx, valid_len)
+    else:
+        ck = _paged_update(cache["k_pages"], k, bt, idx, valid_len)
+        cv = _paged_update(cache["v_pages"], v, bt, idx, valid_len)
+    cpos = _paged_update(cache["pos_pages"], positions, bt, idx, valid_len)
+    new_cache = {"k_pages": ck, "v_pages": cv, "pos_pages": cpos,
+                 "block_tables": bt, "index": idx + S}
+    if quantized:
+        new_cache["k_scale_pages"] = cks
+        new_cache["v_scale_pages"] = cvs
+    if S == 1 and mask_kind in ("causal", "sliding", "prefix"):
+        out = _decode_attention_paged_cached(
+            q, ck, cv, cpos, bt, positions[:, 0], cks, cvs,
+            window if mask_kind == "sliding" else None)
+    else:
+        # chunked-prefill / multi-token oracle path: gather the pools
+        # into the row-linear layout (XLA dequant on the int8 path)
+        k_lin = _gather_paged(ck, bt)
+        v_lin = _gather_paged(cv, bt)
+        pos_lin = _gather_paged(cpos, bt)
+        if quantized:
+            k_lin = _dequantize_kv(k_lin, _gather_paged(cks, bt)).astype(
+                q.dtype)
+            v_lin = _dequantize_kv(v_lin, _gather_paged(cvs, bt)).astype(
+                q.dtype)
+        out = dense_attention(q, k_lin, v_lin, positions, pos_lin, mask_kind,
+                              window, prefix_len)
+    return out, new_cache
 
 
 def attention_apply(
@@ -419,7 +544,12 @@ def attention_apply(
         k = apply_rope(k, positions, rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "block_tables" in cache:
+        # Paged (block-table) cache: fixed-size blocks from a shared
+        # pool, routed per row by the block table (serving/paged_cache).
+        out, new_cache = _paged_cache_apply(cache, k, v, positions, q,
+                                            mask_kind, window, prefix_len)
+    elif cache is not None:
         # Ring-buffer cache: slot = position % capacity.  Sliding-window
         # layers size capacity == window, so entries are overwritten exactly
         # when they leave the window; per-slot true positions drive masking.
@@ -503,6 +633,46 @@ def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
     if dtype == jnp.int8:
         out["k_scale"] = jnp.zeros((batch, max_len, n_kv_heads), jnp.float32)
         out["v_scale"] = jnp.zeros((batch, max_len, n_kv_heads), jnp.float32)
+    return out
+
+
+def init_paged_kv_cache(batch: int, num_blocks: int, block_size: int,
+                        max_blocks: int, n_kv_heads: int, head_dim: int,
+                        dtype=jnp.bfloat16) -> dict:
+    """Paged KV state: shared fixed-size block pools + per-row block
+    tables.  Physical block 0 is reserved as the null block — never
+    allocated, all positions empty-sentinel — so zeroed table entries
+    (unallocated logical blocks) read as fully masked."""
+    out = {
+        "k_pages": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                             dtype),
+        "v_pages": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                             dtype),
+        "pos_pages": jnp.full((num_blocks, block_size), 2 ** 30, jnp.int32),
+        "block_tables": jnp.zeros((batch, max_blocks), jnp.int32),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+    if dtype == jnp.int8:
+        out["k_scale_pages"] = jnp.zeros(
+            (num_blocks, block_size, n_kv_heads), jnp.float32)
+        out["v_scale_pages"] = jnp.zeros(
+            (num_blocks, block_size, n_kv_heads), jnp.float32)
+    return out
+
+
+def paged_kv_cache_logical_axes(quantized: bool = False) -> dict:
+    """Pools shard over KV heads (the head-parallel TP decode path holds
+    1/p of every block); tables/indices are per-row host state."""
+    out = {
+        "k_pages": (None, None, "kv_heads", None),
+        "v_pages": (None, None, "kv_heads", None),
+        "pos_pages": (None, None),
+        "block_tables": ("batch", None),
+        "index": ("batch",),
+    }
+    if quantized:
+        out["k_scale_pages"] = (None, None, "kv_heads")
+        out["v_scale_pages"] = (None, None, "kv_heads")
     return out
 
 

@@ -403,7 +403,7 @@ class Model:
                                          last_only=True)
         return logits, caches
 
-    def prefill_padded(self, params, batch, caches, lengths):
+    def prefill_padded(self, params, batch, caches, lengths, offset=None):
         """Prefill bucket-padded prompts without leaking pad tokens.
 
         ``lengths`` (int32 [B]) are the true prompt lengths; positions at
@@ -413,19 +413,34 @@ class Model:
         each row's last *real* token ([B, 1, vocab]) and caches whose
         write index is reset to the true length — the next decode token
         lands at position ``length``, overwriting the first pad slot.
+
+        ``offset`` (int32 [B], default zeros) starts each row's
+        positions at ``offset[b]`` instead of 0 — chunked prefill: the
+        continuously-batched paged engine feeds a long prompt through
+        this entry one chunk at a time, with ``lengths`` the valid
+        length *within the chunk* and the write index resuming at
+        ``offset + lengths``.
         """
         B = self._batch_size(batch)
         S = self._step_len(batch)
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-        pos = jnp.where(pos < lengths[:, None], pos, 2 ** 30)
+        rel = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if offset is None:
+            pos = jnp.where(rel < lengths[:, None], rel, 2 ** 30)
+            end = lengths
+        else:
+            off = jnp.asarray(offset, jnp.int32)
+            pos = jnp.where(rel < lengths[:, None], rel + off[:, None],
+                            2 ** 30)
+            end = off + lengths
         logits, caches, _ = self.forward(params, batch, caches=caches,
                                          positions=pos,
                                          last_index=lengths - 1)
 
         def fix(path, a):
             name = str(path[-1]) if path else ""
-            if "index" in name and hasattr(a, "dtype"):
-                return jnp.broadcast_to(lengths, a.shape).astype(a.dtype)
+            if "index" in name and hasattr(a, "dtype") and a.ndim >= 1 \
+                    and "pos" not in name:
+                return jnp.broadcast_to(end, a.shape).astype(a.dtype)
             return a
 
         caches = jax.tree_util.tree_map_with_path(fix, caches)
@@ -521,6 +536,42 @@ class Model:
                 lambda a: jnp.broadcast_to(a[None], (count, *a.shape)).copy()
                 if hasattr(a, "shape") else a, one)
         return caches
+
+    def init_paged_cache(self, batch: int, num_blocks: int, block_size: int,
+                         max_blocks: int, kv_dtype=None):
+        """Paged (block-table) KV caches for the continuously-batched
+        serving engine: every attention layer gets its own pool of
+        ``num_blocks`` fixed-size blocks (block 0 reserved as the
+        all-empty null block) plus per-row block tables of width
+        ``max_blocks``.  Only attention mixers page; recurrent mixers
+        have no position-keyed cache to page."""
+        kv = kv_dtype or self.cfg.kv_cache_dtype
+        dt = jnp.int8 if kv == "int8" else jnp.bfloat16
+        caches = {}
+        for gi, (spec, count) in enumerate(self.groups):
+            mixer = spec[0]
+            if mixer not in ("attn", "attn_local"):
+                raise NotImplementedError(
+                    f"paged KV cache: unsupported mixer {mixer!r} (only "
+                    f"attention layers hold a position-keyed cache)")
+            one = attn_mod.init_paged_kv_cache(
+                batch, num_blocks, block_size, max_blocks,
+                self.cfg.n_kv_heads, self.cfg.head_dim, dtype=dt)
+            caches[f"group_{gi}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (count, *a.shape)).copy()
+                if hasattr(a, "shape") else a, one)
+        return caches
+
+    def paged_cache_axes(self, kv_dtype=None):
+        kv = kv_dtype or self.cfg.kv_cache_dtype
+        axes = {}
+        for gi, (spec, _) in enumerate(self.groups):
+            one = attn_mod.paged_kv_cache_logical_axes(
+                quantized=kv == "int8")
+            axes[f"group_{gi}"] = jax.tree.map(
+                lambda a: ("layers", *a) if isinstance(a, tuple) else a, one,
+                is_leaf=lambda a: isinstance(a, tuple))
+        return axes
 
     def abstract_cache(self, batch: int, max_len: int, kv_dtype=None):
         return jax.eval_shape(

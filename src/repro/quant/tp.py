@@ -255,3 +255,42 @@ def decode_attn(mesh: Mesh, q: jax.Array, k: jax.Array, v: jax.Array,
         args += [k_scale, v_scale]
     return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                      out_specs=P(None, TP_AXIS), check_rep=False)(*args)
+
+
+def decode_attn_paged(mesh: Mesh, q: jax.Array, k_pages: jax.Array,
+                      v_pages: jax.Array, pos_pages: jax.Array,
+                      block_tables: jax.Array, q_pos: jax.Array,
+                      k_scale_pages: jax.Array | None = None,
+                      v_scale_pages: jax.Array | None = None, *,
+                      window: int | None = None,
+                      use_kernel: bool = True) -> jax.Array:
+    """Head-parallel paged flash-decode: the block-table analogue of
+    :func:`decode_attn`.
+
+    q [B, KH, G, D] and the KV block pools [NB, bs, KH, D] (+[NB, bs,
+    KH] scales on the int8 path) shard on their KV-head axis; the block
+    tables and position pages replicate (they are head-agnostic host
+    metadata).  Each shard streams its KH/p heads through the same
+    scalar-prefetched block-table kernel with no collective — the paged
+    pool, like the ring cache, holds 1/p of the KV bytes per device.
+    """
+    def body(ql, kl, vl, posl, btl, qpl, *sc):
+        ks, vs = sc if sc else (None, None)
+        if use_kernel:
+            return kops.decode_attention_paged(ql, kl, vl, posl, btl, qpl,
+                                               k_scale_pages=ks,
+                                               v_scale_pages=vs,
+                                               window=window)
+        return kref.decode_attention_paged_ref(ql, kl, vl, posl, btl, qpl,
+                                               window=window,
+                                               k_scale_pages=ks,
+                                               v_scale_pages=vs)
+
+    in_specs = [P(None, TP_AXIS), P(None, None, TP_AXIS),
+                P(None, None, TP_AXIS), P(), P(), P()]
+    args = [q, k_pages, v_pages, pos_pages, block_tables, q_pos]
+    if k_scale_pages is not None:
+        in_specs += [P(None, None, TP_AXIS), P(None, None, TP_AXIS)]
+        args += [k_scale_pages, v_scale_pages]
+    return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=P(None, TP_AXIS), check_rep=False)(*args)

@@ -1,5 +1,7 @@
-from .engine import EngineStats, Request, ServingEngine
+from .engine import (EngineStats, PagedServingEngine, Request,
+                     ServingEngine)
 from .lifecycle import (TERMINAL_STATUSES, EngineStallError, RequestStatus)
+from .paged_cache import BlockAllocator, PagedKVCache, PoolExhausted
 
 
 def __getattr__(name):
@@ -13,6 +15,7 @@ def __getattr__(name):
     raise AttributeError(name)
 
 
-__all__ = ["EngineStats", "Request", "ServingEngine",
+__all__ = ["EngineStats", "Request", "ServingEngine", "PagedServingEngine",
+           "BlockAllocator", "PagedKVCache", "PoolExhausted",
            "RequestStatus", "TERMINAL_STATUSES", "EngineStallError",
            "DiffusionEngine", "ImageRequest", "DiffusionStats"]

@@ -42,6 +42,7 @@ import numpy as np
 
 from .lifecycle import (EngineStallError, LifecycleMixin, RequestStatus,
                         TERMINAL_STATUSES)
+from .paged_cache import PoolExhausted
 
 
 @dataclass
@@ -61,6 +62,7 @@ class Request(LifecycleMixin):
     status: RequestStatus = RequestStatus.QUEUED
     error: Optional[str] = None
     submitted_at: float = 0.0
+    first_token_at: Optional[float] = None   # engine clock; TTFT source
 
 
 @dataclass
@@ -76,6 +78,10 @@ class EngineStats:
     rejected: int = 0           # reached REJECTED
     timed_out: int = 0          # reached TIMED_OUT
     prefill_failures: int = 0   # health check tripped on prefill logits
+    # paged-engine counters (zero on the ring engine)
+    preemptions: int = 0        # sequences evicted for blocks, requeued
+    prefill_chunks: int = 0     # chunked-prefill dispatches
+    cache_utilization: list = field(default_factory=list)
 
 
 class ServingEngine:
@@ -152,18 +158,7 @@ class ServingEngine:
         # dequantizes in-kernel); the fp cache stays the oracle path
         self.kv_dtype = ("int8" if quant_plan is not None
                          and getattr(quant_plan, "attn_kv", False) else None)
-        self.cache = model.init_cache(n_slots, max_len,
-                                      kv_dtype=self.kv_dtype)
-        if mesh is not None:
-            # place the cache per its logical axes: KV heads bind the
-            # model axis (when divisible), so TP decode holds 1/p of
-            # the KV cache per shard instead of replicating it
-            from repro.parallel.sharding import make_shardings
-            self.cache = jax.device_put(
-                self.cache,
-                make_shardings(mesh, self.cache,
-                               model.cache_axes(kv_dtype=self.kv_dtype),
-                               rules))
+        self.cache = self._init_cache()
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
         self.slot_last = np.zeros(n_slots, np.int32)
@@ -172,6 +167,23 @@ class ServingEngine:
         self._build_steps()
 
     # ------------------------------------------------------------------
+    def _init_cache(self):
+        """Build (and mesh-place) the KV cache; the paged engine
+        overrides this with block pools + tables."""
+        cache = self.model.init_cache(self.n_slots, self.max_len,
+                                      kv_dtype=self.kv_dtype)
+        if self.mesh is not None:
+            # place the cache per its logical axes: KV heads bind the
+            # model axis (when divisible), so TP decode holds 1/p of
+            # the KV cache per shard instead of replicating it
+            from repro.parallel.sharding import make_shardings
+            cache = jax.device_put(
+                cache,
+                make_shardings(self.mesh, cache,
+                               self.model.cache_axes(kv_dtype=self.kv_dtype),
+                               self.rules))
+        return cache
+
     def _mesh_ctx(self):
         """Active sharding context for step tracing when serving on a
         mesh (turns on the shard_map TP paths in quant/tp.py)."""
@@ -291,6 +303,11 @@ class ServingEngine:
                 f"wrap and silently drop the oldest prompt tokens. Raise "
                 f"max_len (or shrink prefill_bucket) so padded prompts "
                 f"stay strictly below it.")
+        return self._enqueue(req)
+
+    def _enqueue(self, req: Request) -> RequestStatus:
+        """Shared admission tail: capacity rejections are typed, not
+        raised (see :meth:`submit`)."""
         if self.closed:
             return self._finish(req, RequestStatus.REJECTED,
                                 "engine closed (draining or shut down)")
@@ -381,12 +398,19 @@ class ServingEngine:
                 nxt = self._sample(req, logits, 0)
                 req.status = RequestStatus.ACTIVE
                 req.generated.append(nxt)
+                if req.first_token_at is None:
+                    req.first_token_at = self._clock()
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = L
                 self.slot_last[slot] = nxt
 
     def _active(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _clear_slot(self, slot: int) -> None:
+        """Free a slot after its request went terminal (the paged engine
+        additionally releases the slot's KV blocks here)."""
+        self.slot_req[slot] = None
 
     def step(self) -> None:
         """One engine iteration: expire + admit + one batched decode."""
@@ -396,7 +420,7 @@ class ServingEngine:
             if req.expired(now):
                 self._finish(req, RequestStatus.TIMED_OUT,
                              "deadline expired mid-decode")
-                self.slot_req[slot] = None
+                self._clear_slot(slot)
         self._admit(now)
         active = self._active()
         if not active:
@@ -411,7 +435,7 @@ class ServingEngine:
             if self.health_checks and not np.isfinite(logits[slot]).all():
                 self._finish(req, RequestStatus.FAILED,
                              "non-finite logits")
-                self.slot_req[slot] = None    # slot freed, cache reset
+                self._clear_slot(slot)        # slot freed, cache reset
                 continue                      # on its next prefill
             tok = self._sample(req, logits[slot], len(req.generated))
             req.generated.append(tok)
@@ -422,7 +446,7 @@ class ServingEngine:
                     or len(req.generated) >= req.max_new_tokens
                     or self.slot_pos[slot] >= self.max_len - 1):
                 self._finish(req, RequestStatus.OK)
-                self.slot_req[slot] = None   # slot freed immediately
+                self._clear_slot(slot)       # slot freed immediately
 
     def pending(self) -> int:
         """Requests not yet terminal: queued + active."""
@@ -460,7 +484,7 @@ class ServingEngine:
             self._finish(self.queue.popleft(), RequestStatus.TIMED_OUT, why)
         for slot in self._active():
             self._finish(self.slot_req[slot], RequestStatus.TIMED_OUT, why)
-            self.slot_req[slot] = None
+            self._clear_slot(slot)
 
     def drain(self, max_iters: int = 10_000,
               on_stall: str = "timeout") -> None:
@@ -484,7 +508,7 @@ class ServingEngine:
         for slot in self._active():
             self._finish(self.slot_req[slot], RequestStatus.FAILED,
                          "engine shutdown with request in flight")
-            self.slot_req[slot] = None
+            self._clear_slot(slot)
 
 
 def _set_pos_empty(cache):
@@ -496,3 +520,374 @@ def _set_pos_empty(cache):
             return jnp.full_like(a, 2 ** 30)
         return a
     return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+class PagedServingEngine(ServingEngine):
+    """Continuously batched engine over the paged (block-table) KV cache.
+
+    Differences from the ring-cache base engine (docs/architecture.md
+    §10):
+
+    * **Paged KV storage** — slots hold per-sequence block tables into
+      shared fixed-size block pools (:mod:`repro.serving.paged_cache`);
+      a short sequence consumes blocks for its actual length, not a
+      ``max_len`` ring, so ``num_blocks`` can be provisioned well below
+      ``n_slots * max_blocks`` and freed blocks recirculate every step.
+    * **Chunked prefill** — prompts stream through
+      ``Model.prefill_padded(offset=...)`` one ``prefill_chunk``-token
+      chunk per engine step, interleaved with decode for the already-
+      running slots, so a long prompt no longer stalls every other
+      sequence for its full prefill.
+    * **Preemption** — when the pool runs dry mid-decode, the youngest
+      sequence is evicted (blocks freed, request requeued at the front)
+      and later resumed by recomputation: its resume prefill covers
+      prompt + generated-so-far, rebuilding the evicted logical KV
+      state (recomputed KV can differ from decode-written KV in the
+      last float bit — chunk-prefill vs kernel-decode reduction
+      shapes — so greedy generations continue unchanged, sampled ones
+      continue from the same distribution).
+    * **Block-granular admission** — ``submit`` bounds prompts by the
+      block table (``max_blocks * block_size`` positions, with one
+      position of decode headroom), not by the prefill bucket padding
+      of the ring layout.
+
+    Scheduling never changes tokens: every per-row computation depends
+    only on that row's logical KV content, so continuous batching here
+    is bitwise-identical to static batching of the same requests
+    (pinned by tests/test_serving.py).
+    """
+
+    def __init__(self, model, params, n_slots: int = 8,
+                 max_len: int = 512, prefill_bucket: int = 64,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None, **kw):
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.prefill_chunk = (prefill_chunk if prefill_chunk is not None
+                              else prefill_bucket)
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be positive")
+        # slot -> [resume tokens (prompt + generated), next chunk offset]
+        self.slot_fill: dict[int, list] = {}
+        self._slot_seq = np.zeros(n_slots, np.int64)   # admission order
+        self._admit_order = 0
+        super().__init__(model, params, n_slots=n_slots, max_len=max_len,
+                         prefill_bucket=prefill_bucket, **kw)
+
+    # -- cache ---------------------------------------------------------
+    def _init_cache(self):
+        from .paged_cache import PagedKVCache
+        self.paged = PagedKVCache(self.model, self.n_slots, self.max_len,
+                                  self.block_size,
+                                  num_blocks=self.num_blocks,
+                                  kv_dtype=self.kv_dtype, mesh=self.mesh,
+                                  rules=self.rules)
+        return self.paged.cache
+
+    def _tables(self):
+        return jnp.asarray(self.paged.tables)
+
+    # -- jitted steps --------------------------------------------------
+    def _build_steps(self):
+        model = self.model
+        step_ctx = self._step_ctx
+        num_blocks = self.paged.allocator.num_blocks
+
+        def per_row(name: str) -> bool:
+            # leaves with a leading [layers, batch, ...] layout; the
+            # pools are [layers, num_blocks, ...] and shared by all rows
+            return ("block_tables" in name
+                    or ("index" in name and "pos" not in name))
+
+        def install_tables(cache, tables):
+            def fix(path, a):
+                name = str(path[-1]) if path else ""
+                if "block_tables" in name:
+                    return jnp.broadcast_to(
+                        tables[None].astype(a.dtype), a.shape)
+                return a
+            return jax.tree_util.tree_map_with_path(fix, cache)
+
+        @jax.jit
+        def prefill_chunk(params, cache, tokens, slot, length, offset,
+                          tables):
+            """Prefill one chunk of one request into slot ``slot``.
+
+            Unlike the ring engine's ``prefill_one`` the sub-view is
+            *not* zeroed: the pools are shared by every sequence, and a
+            fresh slot's blocks are already clean (positions scrubbed to
+            the empty sentinel on release).  ``tokens`` is the padded
+            chunk, ``length`` its valid length, ``offset`` the running
+            position of the chunk's first token; the write index resumes
+            at ``offset + length``.
+            """
+            cache = install_tables(cache, tables)
+
+            def take(path, a):
+                name = str(path[-1]) if path else ""
+                if per_row(name):
+                    return jax.lax.dynamic_slice_in_dim(a, slot, 1, 1)
+                return a
+
+            sub = jax.tree_util.tree_map_with_path(take, cache)
+            with step_ctx():
+                logits, sub = model.prefill_padded(
+                    params, {"inputs": tokens[None]}, sub,
+                    jnp.asarray([length], jnp.int32),
+                    offset=jnp.asarray([offset], jnp.int32))
+
+            def put(path, full, s):
+                name = str(path[-1]) if path else ""
+                if per_row(name):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        full, s.astype(full.dtype), slot, 1)
+                return s.astype(full.dtype)
+
+            cache = jax.tree_util.tree_map_with_path(put, cache, sub)
+            return logits[0, -1], cache
+
+        @jax.jit
+        def decode_all(params, cache, last_tokens, decode_mask, tables):
+            """One decode step for every slot in ``decode_mask``.
+
+            Non-decoding slots (empty or mid-prefill) get their write
+            index masked to the empty sentinel: their KV/position writes
+            land out of range and are dropped (``mode="drop"``), their
+            garbage logits are discarded host-side, and their true index
+            is restored by their next prefill chunk — so a shared-pool
+            decode step never perturbs a row that is not decoding.
+            """
+            cache = install_tables(cache, tables)
+
+            def mask_idx(path, a):
+                name = str(path[-1]) if path else ""
+                if "index" in name and "pos" not in name:
+                    return jnp.where(decode_mask[None, :], a, 2 ** 30)
+                return a
+
+            cache = jax.tree_util.tree_map_with_path(mask_idx, cache)
+            with step_ctx():
+                logits, cache = model.decode_step(
+                    params, {"inputs": last_tokens[:, None]}, cache)
+            return logits[:, 0], cache
+
+        @jax.jit
+        def scrub(cache, blocks):
+            """Reset freed blocks' positions to the empty sentinel so a
+            reallocated block never exposes its previous sequence's
+            stale positions.  ``blocks`` is padded to the table width
+            with ``num_blocks`` (out of range -> dropped)."""
+            def fix(path, a):
+                name = str(path[-1]) if path else ""
+                if "pos_pages" in name:
+                    return a.at[:, blocks].set(2 ** 30, mode="drop")
+                return a
+            return jax.tree_util.tree_map_with_path(fix, cache)
+
+        self._prefill_chunk_fn = prefill_chunk
+        self._decode_masked = decode_all
+        self._scrub = scrub
+        self._scrub_width = self.paged.max_blocks
+        self._scrub_pad = num_blocks
+
+    # -- admission -----------------------------------------------------
+    def submit(self, req: Request) -> RequestStatus:
+        """Queue a request; block-granular admission bounds.
+
+        The ring engine rejects prompts whose *bucket-padded* length
+        reaches ``max_len``; here the bound is the block table: the
+        prompt plus one decode position must fit in ``max_blocks``
+        blocks (``paged.capacity_tokens`` positions).  A prompt of
+        exactly ``capacity_tokens - 1`` tokens — one block of headroom,
+        rejected by the ring layout whenever it pads up to ``max_len``
+        — is admissible here.
+        """
+        L = len(req.prompt)
+        if L == 0:
+            self._finish(req, RequestStatus.REJECTED, "empty prompt")
+            raise ValueError("empty prompt: requests must contain at "
+                             "least one token")
+        cap = self.paged.capacity_tokens
+        if L + 1 > cap:
+            self._finish(req, RequestStatus.REJECTED,
+                         "prompt exceeds the slot's block table")
+            raise ValueError(
+                f"prompt of length {L} (+1 decode position) needs "
+                f"{self.paged.allocator.blocks_for(L + 1)} blocks but the "
+                f"block table holds {self.paged.max_blocks} x "
+                f"{self.block_size}-token blocks ({cap} positions). "
+                f"Raise max_len (table width) or block_size.")
+        return self._enqueue(req)
+
+    def _clear_slot(self, slot: int) -> None:
+        freed = self.paged.release(slot)
+        if freed:
+            pad = np.full(self._scrub_width, self._scrub_pad, np.int32)
+            pad[:len(freed)] = freed
+            self.cache = self._scrub(self.cache, jnp.asarray(pad))
+        self.slot_req[slot] = None
+        self.slot_fill.pop(slot, None)
+
+    def _admit(self, now: float) -> None:
+        """Assign queued requests to free slots (FIFO, no reordering).
+
+        Admission only *claims* the slot and stages the resume tokens
+        (prompt + any generated-before-preemption); the actual cache
+        writes happen in the chunked-prefill phase of :meth:`step`.
+        Admission stops — preserving FIFO order — as soon as the head
+        request's first-token block demand exceeds the free pool.
+        """
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None:
+                continue
+            while self.queue:
+                req = self.queue[0]
+                if req.expired(now):
+                    self.queue.popleft()
+                    self._finish(req, RequestStatus.TIMED_OUT,
+                                 "deadline expired while queued")
+                    continue
+                toks = np.asarray(req.prompt, np.int32)
+                if req.generated:    # resume-by-recompute after preemption
+                    toks = np.concatenate(
+                        [toks, np.asarray(req.generated, np.int32)])
+                if not self.paged.can_fit(len(toks) + 1):
+                    return
+                self.queue.popleft()
+                req.status = RequestStatus.ACTIVE
+                self.slot_req[slot] = req
+                self.slot_fill[slot] = [toks, 0]
+                self._slot_seq[slot] = self._admit_order
+                self._admit_order += 1
+                break
+
+    # -- block pressure ------------------------------------------------
+    def _pick_victim(self, requester: int) -> Optional[int]:
+        cands = [s for s in self._active()
+                 if s != requester and self.paged.n_blocks_of[s] > 0]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: self._slot_seq[s])
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` to free its blocks; the request requeues at
+        the *front* (it is the oldest waiting work) and resumes later by
+        recomputing prompt + generated-so-far."""
+        req = self.slot_req[slot]
+        self._clear_slot(slot)
+        req.status = RequestStatus.QUEUED
+        self.queue.appendleft(req)
+        self.stats.preemptions += 1
+
+    def _ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` to cover ``n_tokens`` positions, preempting
+        younger sequences under pool pressure.  Returns False when
+        ``slot`` itself went terminal (pool exhausted with no victim
+        left — the request fails rather than stalling the engine)."""
+        while True:
+            try:
+                self.paged.ensure(slot, n_tokens)
+                return True
+            except PoolExhausted:
+                victim = self._pick_victim(slot)
+                if victim is None:
+                    self._finish(self.slot_req[slot], RequestStatus.FAILED,
+                                 "KV block pool exhausted")
+                    self._clear_slot(slot)
+                    return False
+                self._preempt(victim)
+
+    def _maybe_finish(self, slot: int, req: Request, tok: int) -> None:
+        if ((req.eos_id is not None and tok == req.eos_id)
+                or len(req.generated) >= req.max_new_tokens
+                or self.slot_pos[slot] >= self.paged.capacity_tokens - 1):
+            self._finish(req, RequestStatus.OK)
+            self._clear_slot(slot)
+
+    # -- the engine loop -----------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: expire + admit + one prefill chunk per
+        filling slot + one batched decode for every running slot."""
+        now = self._clock()
+        for slot in self._active():
+            req = self.slot_req[slot]
+            if req.expired(now):
+                self._finish(req, RequestStatus.TIMED_OUT,
+                             "deadline expired mid-decode")
+                self._clear_slot(slot)
+        self._admit(now)
+
+        # chunked prefill: one chunk per filling slot, interleaved with
+        # decode below (a long prompt never stalls running sequences)
+        C = self.prefill_chunk
+        for slot in sorted(self.slot_fill):
+            if slot not in self.slot_fill:       # preempted this step
+                continue
+            req = self.slot_req[slot]
+            toks, off = self.slot_fill[slot]
+            chunk = toks[off:off + C]
+            valid = len(chunk)
+            if valid < C:                        # pad by repeating
+                chunk = np.concatenate(
+                    [chunk, np.full(C - valid, chunk[-1])]).astype(np.int32)
+            if not self._ensure(slot, off + valid):
+                continue
+            logits, self.cache = self._prefill_chunk_fn(
+                self.params, self.cache, jnp.asarray(chunk), slot,
+                valid, off, self._tables())
+            self.stats.prefill_chunks += 1
+            off += valid
+            if off < len(toks):
+                self.slot_fill[slot][1] = off
+                continue
+            # final chunk: the request joins the decode batch
+            self.stats.prefills += 1
+            logits = self._apply_fault_hook("prefill", np.asarray(logits))
+            if self.health_checks and not np.isfinite(logits).all():
+                self.stats.prefill_failures += 1
+                self._finish(req, RequestStatus.FAILED,
+                             "non-finite prefill logits")
+                self._clear_slot(slot)
+                continue
+            tok = self._sample(req, logits, len(req.generated))
+            req.generated.append(tok)
+            if req.first_token_at is None:
+                req.first_token_at = self._clock()
+            del self.slot_fill[slot]
+            self.slot_pos[slot] = len(toks)
+            self.slot_last[slot] = tok
+            self._maybe_finish(slot, req, tok)
+
+        # batched decode over every slot that is past prefill
+        ok = []
+        for slot in self._active():
+            if slot in self.slot_fill or self.slot_req[slot] is None:
+                continue
+            if self._ensure(slot, int(self.slot_pos[slot]) + 1):
+                ok.append(slot)
+        ok = [s for s in ok if self.slot_req[s] is not None
+              and s not in self.slot_fill]       # drop preempted victims
+        if ok:
+            self.stats.batch_occupancy.append(len(ok) / self.n_slots)
+            mask = np.zeros(self.n_slots, bool)
+            mask[ok] = True
+            logits, self.cache = self._decode_masked(
+                self.params, self.cache, jnp.asarray(self.slot_last),
+                jnp.asarray(mask), self._tables())
+            logits = self._apply_fault_hook("decode", np.asarray(logits))
+            self.stats.decode_steps += 1
+            for slot in ok:
+                req = self.slot_req[slot]
+                if self.health_checks \
+                        and not np.isfinite(logits[slot]).all():
+                    self._finish(req, RequestStatus.FAILED,
+                                 "non-finite logits")
+                    self._clear_slot(slot)
+                    continue
+                tok = self._sample(req, logits[slot], len(req.generated))
+                req.generated.append(tok)
+                self.stats.tokens_out += 1
+                self.slot_last[slot] = tok
+                self.slot_pos[slot] += 1
+                self._maybe_finish(slot, req, tok)
+        self.stats.cache_utilization.append(self.paged.utilization())

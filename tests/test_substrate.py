@@ -1,5 +1,6 @@
 """Substrate tests: data pipeline, checkpointing (+restart +re-mesh),
-trainer fault tolerance, serving engine (continuous batching), optimizer."""
+trainer fault tolerance, optimizer; the serving-engine tests moved to
+tests/test_serving.py."""
 import math
 
 import jax
@@ -12,7 +13,6 @@ from repro.checkpoint import Checkpointer
 from repro.configs import get_config, reduced_config
 from repro.data import DataConfig, Pipeline, for_model
 from repro.models import build_model
-from repro.serving import Request, ServingEngine
 from repro.training import (StragglerPolicy, Trainer, TrainerConfig,
                             simple_train_step)
 
@@ -139,180 +139,6 @@ class TestTrainer:
             pol.observe(s, 0.1)
         assert pol.observe(10, 1.0) is True
         assert pol.flagged
-
-
-# ---------------------------------------------------------------------------
-# serving engine
-# ---------------------------------------------------------------------------
-class TestServingEngine:
-    def test_continuous_batching_generates(self, small_model):
-        cfg, m, params = small_model
-        eng = ServingEngine(m, params, n_slots=3, max_len=64,
-                            prefill_bucket=8)
-        rng = np.random.default_rng(0)
-        reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 5 + i),
-                        max_new_tokens=6 + i) for i in range(5)]
-        for r in reqs:
-            eng.submit(r)
-        eng.run_until_done(max_iters=200)
-        assert all(r.done for r in reqs)
-        for i, r in enumerate(reqs):
-            assert len(r.generated) == 6 + i
-        # more requests than slots -> continuous batching actually batched
-        assert eng.stats.prefills == 5
-        assert max(eng.stats.batch_occupancy) > 1 / 3
-
-    def test_greedy_matches_stepwise_forward(self, small_model):
-        """Engine greedy decode == naive full-forward argmax decode."""
-        cfg, m, params = small_model
-        prompt = np.array([5, 9, 2, 7], np.int32)
-        eng = ServingEngine(m, params, n_slots=2, max_len=32,
-                            prefill_bucket=4)
-        req = Request(uid=0, prompt=prompt, max_new_tokens=5)
-        eng.submit(req)
-        eng.run_until_done(max_iters=50)
-
-        toks = list(prompt)
-        for _ in range(5):
-            logits, _, _ = m.forward(params,
-                                     {"inputs": jnp.asarray([toks])})
-            toks.append(int(jnp.argmax(logits[0, -1])))
-        assert req.generated == toks[len(prompt):]
-
-    def test_bucket_padded_prefill_matches_exact(self, small_model):
-        """Regression for pad-token leakage: bucket padding repeats the
-        last prompt token, but those positions now carry the
-        empty-slot sentinel (2**30) — the model must produce the exact
-        logits and greedy continuation of an unpadded prefill."""
-        cfg, m, params = small_model
-        prompt = np.array([5, 9, 2, 7, 11], np.int32)          # len 5
-        e_pad = ServingEngine(m, params, n_slots=1, max_len=32,
-                              prefill_bucket=8)                # 3 pads
-        e_exact = ServingEngine(m, params, n_slots=1, max_len=32,
-                                prefill_bucket=5)              # no pad
-        toks_pad = np.concatenate(
-            [prompt, np.full(3, prompt[-1])]).astype(np.int32)
-        lp, _ = e_pad._prefill_one(e_pad.params, e_pad.cache,
-                                   jnp.asarray(toks_pad), 0, 5)
-        le, _ = e_exact._prefill_one(e_exact.params, e_exact.cache,
-                                     jnp.asarray(prompt), 0, 5)
-        np.testing.assert_allclose(np.asarray(lp), np.asarray(le),
-                                   rtol=1e-5, atol=1e-5)
-
-        r_pad = Request(uid=0, prompt=prompt, max_new_tokens=6)
-        e_pad.submit(r_pad)
-        e_pad.run_until_done(max_iters=50)
-        r_exact = Request(uid=0, prompt=prompt, max_new_tokens=6)
-        e2 = ServingEngine(m, params, n_slots=1, max_len=32,
-                           prefill_bucket=5)
-        e2.submit(r_exact)
-        e2.run_until_done(max_iters=50)
-        assert r_pad.generated == r_exact.generated
-
-    def test_bucket_padded_prefill_sliding_window(self):
-        """Pad entries must not consume sliding-window ring capacity:
-        with prompt_len + pad > window, a naive ring write would evict
-        real in-window tokens with masked pads (regression: the ring
-        update now keeps the last `cap` VALID entries)."""
-        cfg = reduced_config(get_config("gemma3-4b"))   # window 8
-        assert cfg.sliding_window
-        m = build_model(cfg)
-        params = m.init(KEY)
-        prompt = np.arange(1, 13, dtype=np.int32) % cfg.vocab  # len 12
-        gens = []
-        for bucket in (16, 12):                        # padded vs exact
-            eng = ServingEngine(m, params, n_slots=1, max_len=32,
-                                prefill_bucket=bucket)
-            req = Request(uid=0, prompt=prompt, max_new_tokens=5)
-            eng.submit(req)
-            eng.run_until_done(max_iters=50)
-            gens.append(req.generated)
-        assert gens[0] == gens[1]
-
-    def test_freed_slot_reuse_int8_cache_matches_fresh_engine(self):
-        """Continuous-batching slot reuse with the int8 KV cache: a slot
-        freed by a finished request and re-admitted must generate the
-        same tokens as a fresh engine — pins the _set_pos_empty +
-        quantized-cache (k/v + scales) reset interaction."""
-        import dataclasses
-
-        cfg = dataclasses.replace(reduced_config(get_config("gemma-2b")),
-                                  kv_cache_dtype="int8")
-        m = build_model(cfg)
-        params = m.init(KEY)
-        rng = np.random.default_rng(3)
-        prompt_a = rng.integers(0, cfg.vocab, 6).astype(np.int32)
-        prompt_b = rng.integers(0, cfg.vocab, 5).astype(np.int32)
-
-        def generate(engine, prompt, uid):
-            req = Request(uid=uid, prompt=prompt, max_new_tokens=6)
-            engine.submit(req)
-            engine.run_until_done(max_iters=50)
-            return req.generated
-
-        eng = ServingEngine(m, params, n_slots=1, max_len=64,
-                            prefill_bucket=8)
-        generate(eng, prompt_a, 0)          # occupies then frees slot 0
-        reused = generate(eng, prompt_b, 1)  # re-admitted into slot 0
-        fresh = ServingEngine(m, params, n_slots=1, max_len=64,
-                              prefill_bucket=8)
-        assert reused == generate(fresh, prompt_b, 1)
-
-    def test_quant_plan_engine_generates(self, small_model):
-        """Full-plan INT8 engine: whole decode path on QuantizedLinear
-        leaves (oracle numerics on CPU) still serves correctly."""
-        from repro.quant import QuantPlan, plan_is_applied
-        cfg, m, params = small_model
-        eng = ServingEngine(m, params, n_slots=2, max_len=32,
-                            prefill_bucket=4, quant_plan=QuantPlan.full())
-        assert plan_is_applied(m.groups, eng.params, QuantPlan.full())
-        req = Request(uid=0, prompt=np.array([5, 9, 2, 7], np.int32),
-                      max_new_tokens=5)
-        eng.submit(req)
-        eng.run_until_done(max_iters=50)
-        assert len(req.generated) == 5
-
-    def test_submit_rejects_empty_prompt(self, small_model):
-        """Regression: an empty prompt used to IndexError deep inside
-        ``_admit`` (``req.prompt[-1]`` for bucket padding) mid-serve;
-        submit now rejects it up front with a clear error."""
-        cfg, m, params = small_model
-        eng = ServingEngine(m, params, n_slots=1, max_len=32,
-                            prefill_bucket=4)
-        with pytest.raises(ValueError, match="empty prompt"):
-            eng.submit(Request(uid=0, prompt=np.array([], np.int32)))
-        assert not eng.queue
-
-    def test_submit_rejects_prompt_that_would_wrap_cache(self, small_model):
-        """Regression: a prompt whose bucket-padded length reaches
-        max_len used to wrap the ring cache silently (the prefill write
-        evicted the oldest prompt tokens, corrupting generations);
-        submit now rejects it with a clear error."""
-        cfg, m, params = small_model
-        eng = ServingEngine(m, params, n_slots=1, max_len=16,
-                            prefill_bucket=8)
-        # len 12 pads to 16 == max_len -> wrap
-        with pytest.raises(ValueError, match="ring cache would wrap"):
-            eng.submit(Request(uid=0,
-                               prompt=np.arange(12, dtype=np.int32) % 7))
-        # len 9 pads to 16 too, even though 9 < max_len
-        with pytest.raises(ValueError, match="ring cache would wrap"):
-            eng.submit(Request(uid=1,
-                               prompt=np.arange(9, dtype=np.int32) % 7))
-        # len 7 pads to 8 < 16: admitted and served normally
-        ok = Request(uid=2, prompt=np.arange(7, dtype=np.int32) % 7,
-                     max_new_tokens=3)
-        eng.submit(ok)
-        eng.run_until_done(max_iters=20)
-        assert len(ok.generated) == 3
-
-    def test_quantize_mlp_flag_shim(self, small_model):
-        cfg, m, params = small_model
-        with pytest.warns(DeprecationWarning):
-            eng = ServingEngine(m, params, n_slots=1, max_len=32,
-                                prefill_bucket=4, quantize_mlp=True)
-        from repro.quant import QuantPlan, plan_is_applied
-        assert plan_is_applied(m.groups, eng.params, QuantPlan.mlp_only())
 
 
 # ---------------------------------------------------------------------------
