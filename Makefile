@@ -17,17 +17,24 @@
 # `make test-serving` runs the serving suite: block-allocator property
 # tests, the paged flash-decode bit-identity pins, both continuous-
 # batching engines (ring + paged), and the traffic-harness checks.
-# `make verify` is the pre-push check: fast tests + docs-check + the
-# multi-device TP suite + the attention suite + the serving suite +
-# the DiT suite + the
-# chaos/reliability suite plus a BENCH smoke run (simulator + serving
+# `make audit` proves the CIM execution contract statically: it traces
+# every full-plan arch abstractly (prefill / ring / paged decode,
+# split-KV, TP-2 per-shard, DiT) and diffs the pallas dispatch
+# schedule, dtype flow, collectives and VMEM footprints against
+# src/repro/analysis/manifest.py, then drives the serving retrace
+# guard.  `make lint` enforces the ruff.toml hygiene rules (ruff when
+# installed, stdlib-AST fallback otherwise).
+# `make verify` is the pre-push check: lint + fast tests + docs-check +
+# the multi-device TP suite + the attention suite + the serving suite +
+# the DiT suite + the chaos/reliability suite + the contract audit,
+# plus a BENCH smoke run (simulator + serving
 # rows; merges into
 # BENCH_kernels.json without clobbering the kernel rows — a full
 # `make bench` additionally prunes rows for renamed/deleted benches and
 # measures the resilience_ber_* chaos rows).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-tp test-dit test-chaos test-attn test-serving bench verify docs-check
+.PHONY: test test-fast test-tp test-dit test-chaos test-attn test-serving bench verify docs-check audit lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -56,8 +63,15 @@ test-serving:
 docs-check:
 	$(PY) tools/check_docs.py
 
+audit:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	$(PY) tools/audit_jaxpr.py
+
+lint:
+	$(PY) tools/lint.py
+
 bench:
 	$(PY) -m benchmarks.run
 
-verify: test-fast docs-check test-tp test-attn test-serving test-dit test-chaos
+verify: lint test-fast docs-check test-tp test-attn test-serving test-dit test-chaos audit
 	$(PY) -m benchmarks.run --skip-kernels

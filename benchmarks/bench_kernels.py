@@ -431,27 +431,48 @@ def bench_tp_mlp():
             for p in (1, 2, 4)]
 
 
+SUITES = ("kernels", "resilience", "serving", "simulator")
+
+
+def suite_of(name: str) -> str:
+    """Which row family a bench row belongs to, by name prefix — the
+    granularity at which stale-row pruning is scoped."""
+    if name.startswith(("kernel_", "decode_attn_", "dit_tp_")):
+        return "kernels"   # this module's rows; not all carry kernel_
+    if name.startswith(("resilience_", "ecc_")):
+        return "resilience"
+    if name.startswith("serving_"):
+        return "serving"
+    return "simulator"
+
+
 def write_bench_json(rows, path: str = BENCH_JSON,
-                     full_run: bool = False) -> None:
+                     full_run: bool = False,
+                     ran_suites=None) -> None:
     """Persist (name, us, derived) rows as the cross-PR perf trajectory.
 
     Merges into an existing file instead of overwriting, so partial runs
     (``--skip-kernels``, ``make verify``'s smoke pass, a single-module
-    run) update their rows without dropping everyone else's.  A
-    ``full_run`` (``benchmarks.run`` WITHOUT ``--skip-kernels`` — every
-    row family measured) instead prunes rows absent from this run, so
-    renamed/deleted benches don't survive as stale trajectory entries.
-    Each row records the backend it was measured on (merged-in rows may
-    predate the ``_meta`` header's run).
+    run) update their rows without dropping everyone else's.  Stale-row
+    pruning is scoped to ``ran_suites`` — the row families this
+    invocation actually measured (see :func:`suite_of`): within a suite
+    that ran, rows absent from this run are renamed/deleted benches and
+    are dropped; suites that did NOT run keep their rows untouched.
+    ``full_run=True`` is shorthand for "every suite ran".  Each row
+    records the backend it was measured on (merged-in rows may predate
+    the ``_meta`` header's run).
     """
-    if full_run:
+    if ran_suites is None:
+        ran_suites = set(SUITES) if full_run else set()
+    ran_suites = set(ran_suites)
+    try:
+        with open(path) as f:
+            existing = json.load(f).get("benches", {})
+    except (FileNotFoundError, ValueError):
         existing = {}
-    else:
-        try:
-            with open(path) as f:
-                existing = json.load(f).get("benches", {})
-        except (FileNotFoundError, ValueError):
-            existing = {}
+    fresh = {name for name, _us, _d in rows}
+    existing = {name: row for name, row in existing.items()
+                if name in fresh or suite_of(name) not in ran_suites}
     existing.update({name: {"us": round(us, 1), "derived": derived,
                             "backend": jax.default_backend()}
                      for name, us, derived in rows})
@@ -476,5 +497,5 @@ if __name__ == "__main__":
     bench_rows = bench_kernels()
     for name, us, derived in bench_rows:
         print(f"{name},{us:.1f},{derived}")
-    write_bench_json(bench_rows)
+    write_bench_json(bench_rows, ran_suites={"kernels"})
     print(f"wrote {BENCH_JSON}")

@@ -10,13 +10,13 @@ import time
 
 from repro.core import (DEFAULT_ENERGY_MODEL as EM, design_a, design_b,
                         dit_inference_cost, get_hardware, llm_decode_cost,
-                        llm_inference_cost, llm_prefill_cost, mxu_area_mm2,
-                        pick_designs, pipeline_parallel_dit_cost,
+                        llm_prefill_cost, mxu_area_mm2,
+                        pick_designs,
                         pipeline_parallel_llm_cost, run_exploration,
                         simulate_graph, tpuv4i_baseline)
 from repro.core.workloads import (ModelSpec, TransformerLayerSpec, dit_xl2,
                                   embed_head_graph, gpt3_30b,
-                                  llm_decode_graph, llm_prefill_graph,
+                                  llm_decode_graph,
                                   dit_graph)
 
 BASE = tpuv4i_baseline()

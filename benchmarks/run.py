@@ -5,10 +5,11 @@
 Prints ``name,us_per_call,derived`` CSV rows (derived holds the
 claim-relevant numbers, ours vs the paper's) and **merges** the rows into
 ``BENCH_kernels.json`` (name -> µs + metadata) so the perf trajectory is
-machine-readable across PRs instead of only printed — a ``--skip-kernels``
-smoke run (``make verify``) updates the simulator rows without dropping
-the kernel rows, while a full run (no flag) additionally prunes rows
-whose benches were renamed or deleted.
+machine-readable across PRs instead of only printed.  Stale-row pruning
+is scoped to the row families a run actually measured: a
+``--skip-kernels`` smoke run (``make verify``) updates and prunes the
+simulator/serving rows without touching the kernel/resilience rows,
+while a full run (no flag) prunes renamed/deleted benches everywhere.
 """
 from __future__ import annotations
 
@@ -65,9 +66,14 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     out_path = args.json or BENCH_JSON
-    # a run that measured every row family prunes stale (renamed/deleted)
-    # rows; --skip-kernels smoke runs keep merge-only behavior
-    write_bench_json(rows, out_path, full_run=not args.skip_kernels)
+    # prune stale (renamed/deleted) rows only within the row families
+    # this run actually measured: simulator + serving rows always run;
+    # kernel/resilience rows only without --skip-kernels, and their
+    # stale entries must survive a smoke run untouched
+    ran = {"simulator", "serving"}
+    if not args.skip_kernels:
+        ran |= {"kernels", "resilience"}
+    write_bench_json(rows, out_path, ran_suites=ran)
     print(f"# wrote {out_path}")
 
 

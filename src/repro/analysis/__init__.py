@@ -1,0 +1,24 @@
+"""Static analysis of traced jaxprs: the CIM execution-contract auditor.
+
+The paper's speed/energy claims hold only while every planned op runs
+on the fused INT8 CIM pipeline.  This package proves that, per trace:
+
+- ``manifest``    — the declarative contract (site classes, expected
+  per-block dispatch counts derived from config dims, TP collective
+  budget, VMEM/geometry ceilings).
+- ``jaxpr_tools`` — recursive jaxpr traversal + fact extraction.
+- ``passes``      — the five audit passes (dispatch, dtype-flow,
+  collective, VMEM/block-shape, retrace guard).
+- ``auditor``     — abstract step tracing (eval_shape: full paper-scale
+  configs, zero weight memory) and the registry matrix entry points.
+
+CLI: ``tools/audit_jaxpr.py`` / ``make audit``.
+"""
+from . import jaxpr_tools, manifest, passes  # noqa: F401
+from .auditor import (AuditReport, audit_dit, audit_lm,  # noqa: F401
+                      audit_serving_retrace, full_plan_archs,
+                      trace_lm_step)
+from .jaxpr_tools import iter_eqns, pallas_sites  # noqa: F401
+from .passes import (Violation, classify, collective_audit,  # noqa: F401
+                     dispatch_audit, dtype_flow_audit, retrace_audit,
+                     vmem_audit)

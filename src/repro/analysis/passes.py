@@ -1,0 +1,242 @@
+"""The five audit passes over a traced model step.
+
+Each pass takes facts extracted by ``jaxpr_tools`` plus the expectation
+from ``manifest`` and returns a list of :class:`Violation` — empty means
+the contract holds.  Passes never raise on a violation (the CLI and the
+tests decide severity); they raise only on auditor misuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+import jax.numpy as jnp
+
+from . import jaxpr_tools as jt
+from . import manifest
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract breach, precise enough to act on: which pass, a
+    stable machine-readable code, the kernel/site it anchors to, and a
+    human sentence."""
+    pass_name: str     # dispatch | dtype_flow | collective | vmem | retrace
+    code: str
+    site: str          # kernel fn name, "kernel at file:line", or op key
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: dispatch audit
+# ---------------------------------------------------------------------------
+def classify(sites) -> Counter:
+    """Site-class histogram of a traced step's pallas_call eqns."""
+    return Counter(manifest.KERNEL_SITES.get(s.kernel, "unknown")
+                   for s in sites)
+
+
+def dispatch_audit(sites, expected: Counter) -> list:
+    """Every pallas_call classifies to a known site class, the per-class
+    counts match the manifest exactly, and kernels that contract over a
+    skip list / block table carry their scalar-prefetch operands."""
+    out = []
+    actual: Counter = Counter()
+    for s in sites:
+        cls = manifest.KERNEL_SITES.get(s.kernel)
+        if cls is None:
+            out.append(Violation(
+                "dispatch", "unknown_kernel", s.src,
+                f"pallas kernel {s.kernel!r} is not in the manifest's "
+                f"site-class table"))
+            continue
+        actual[cls] += 1
+        if cls in manifest.PREFETCH_REQUIRED and s.num_prefetch == 0:
+            out.append(Violation(
+                "dispatch", "missing_prefetch", s.src,
+                f"{cls} kernel {s.kernel!r} has no scalar-prefetch "
+                f"operand (skip list / block table dropped — dead MXU "
+                f"work or unmasked reads)"))
+    for cls in sorted(set(expected) | set(actual)):
+        if actual.get(cls, 0) != expected.get(cls, 0):
+            out.append(Violation(
+                "dispatch", "count_mismatch", cls,
+                f"site class {cls!r}: traced {actual.get(cls, 0)} "
+                f"dispatches, manifest expects {expected.get(cls, 0)}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: dtype-flow audit
+# ---------------------------------------------------------------------------
+def dtype_flow_audit(jaxpr, phase: str = "decode",
+                     kv_avals=None) -> list:
+    """No int32 accumulator escapes a kernel un-psummed, no XLA
+    dot_general consumes int8, no int8 tensor is dequantized outside a
+    kernel, and (when ``kv_avals`` — path->aval pairs for the returned
+    cache — is given) KV storage stays int8.
+
+    ``phase="prefill"`` relaxes the dequant rule: prefill attention runs
+    at the XLA level and legitimately dequantizes the int8 cache it
+    attends over (the known non-CIM prefill path).
+    """
+    out = []
+    for eqn in jt.int32_escapes(jaxpr):
+        out.append(Violation(
+            "dtype_flow", "int32_escape", jt.src_info(eqn),
+            f"kernel {jt.kernel_name(eqn)!r} emits a wide integer "
+            f"accumulator to XLA without a model-axis psum consuming "
+            f"it — accumulators must stay in VMEM"))
+    for eqn in jt.int8_xla_dots(jaxpr):
+        shapes = [tuple(v.aval.shape) for v in eqn.invars[:2]]
+        out.append(Violation(
+            "dtype_flow", "int8_xla_dot", "dot_general",
+            f"XLA dot_general contracts int8 operands {shapes} — a "
+            f"dequant-fallback GEMM outside the fused pipeline"))
+    if phase != "prefill":
+        for eqn in jt.int8_dequant_leaks(jaxpr):
+            shape = tuple(eqn.invars[0].aval.shape)
+            dst = eqn.params.get("new_dtype")
+            out.append(Violation(
+                "dtype_flow", "dequant_leak", "convert_element_type",
+                f"int8 tensor {shape} dequantized to {dst} at the XLA "
+                f"level — starts a quantize->dequantize round trip "
+                f"outside the kernels"))
+    for path, aval in (kv_avals or ()):
+        if getattr(aval, "dtype", None) != jnp.int8:
+            out.append(Violation(
+                "dtype_flow", "kv_not_int8", path,
+                f"KV cache leaf {path} returned as "
+                f"{getattr(aval, 'dtype', '?')} though the plan covers "
+                f"attn_kv — int8 storage contract broken"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: collective audit
+# ---------------------------------------------------------------------------
+def collective_audit(jaxpr, sharded: bool,
+                     expected: Counter | None = None) -> list:
+    """Unsharded traces carry no collectives at all.  Sharded traces
+    carry exactly the manifest's (op, axis) histogram — above all, no
+    all-gather of weights or activations on the model axis — and every
+    model-axis psum sums integers (the exactness contract)."""
+    out = []
+    colls = jt.collectives(jaxpr)
+    if not sharded:
+        for c in colls:
+            out.append(Violation(
+                "collective", "unexpected_collective",
+                f"{c.op}{c.axes}",
+                f"collective {c.op} over axes {c.axes} in an unsharded "
+                f"trace"))
+        return out
+    actual: Counter = Counter(c.key for c in colls)
+    for c in colls:
+        if c.op not in manifest.ALLOWED_COLLECTIVE_OPS:
+            out.append(Violation(
+                "collective", "forbidden_collective", f"{c.op}{c.axes}",
+                f"{c.op} over axes {c.axes}: only "
+                f"{sorted(manifest.ALLOWED_COLLECTIVE_OPS)} are part of "
+                f"the TP contract (weight/activation gathers re-open "
+                f"the data-movement tax)"))
+        if c.op == "psum" and manifest.TP_AXIS in c.axes:
+            if any(dt is not None and not jnp.issubdtype(dt, jnp.integer)
+                   for dt in c.dtypes):
+                out.append(Violation(
+                    "collective", "psum_not_int", f"{c.op}{c.axes}",
+                    f"model-axis psum over {c.dtypes} — cross-shard "
+                    f"accumulator sums must be int32 to stay exact"))
+    if expected is not None:
+        for key in sorted(set(expected) | set(actual)):
+            if actual.get(key, 0) != expected.get(key, 0):
+                op, axes = key
+                out.append(Violation(
+                    "collective", "count_mismatch", f"{op}{axes}",
+                    f"{op} over {axes}: traced {actual.get(key, 0)}, "
+                    f"manifest expects {expected.get(key, 0)}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: VMEM / block-shape audit
+# ---------------------------------------------------------------------------
+def vmem_audit(sites, budget_bytes: int | None = None) -> list:
+    """Each pallas_call's static footprint (every BlockSpec block +
+    VMEM scratch) stays under the hardware budget, and GEMM-family
+    weight blocks respect the CIM core geometry: each weight block axis
+    is either a whole multiple of the core tile (k_dim x n_dim) or
+    covers the array's full extent (small/ragged dims fall back to one
+    whole-axis block)."""
+    if budget_bytes is None:
+        budget_bytes = manifest.vmem_budget_bytes()
+    out = []
+    for s in sites:
+        fp = s.vmem_bytes
+        if fp > budget_bytes:
+            out.append(Violation(
+                "vmem", "over_budget", s.src,
+                f"{s.kernel}: static VMEM footprint {fp / 2**20:.1f} MiB "
+                f"(blocks {sum(b.nbytes for b in s.blocks) / 2**20:.1f} "
+                f"+ scratch {s.scratch_bytes / 2**20:.1f}) exceeds the "
+                f"{budget_bytes / 2**20:.0f} MiB budget"))
+        for idx in manifest.WEIGHT_BLOCK_OPERANDS.get(s.kernel, ()):
+            if idx >= len(s.blocks):
+                continue
+            blk = s.blocks[idx]
+            if len(blk.block_shape) < 2:
+                continue
+            bk, bn = blk.block_shape[-2], blk.block_shape[-1]
+            ak = blk.array_shape[-2] if len(blk.array_shape) >= 2 else bk
+            an = blk.array_shape[-1] if blk.array_shape else bn
+            if bk % manifest.CORE_K and bk != ak:
+                out.append(Violation(
+                    "vmem", "bad_block_geometry", s.src,
+                    f"{s.kernel}: weight block K extent {bk} is neither "
+                    f"a multiple of the CIM core k_dim "
+                    f"({manifest.CORE_K}) nor the full axis ({ak})"))
+            if bn % manifest.CORE_N and bn != an:
+                out.append(Violation(
+                    "vmem", "bad_block_geometry", s.src,
+                    f"{s.kernel}: weight block N extent {bn} is neither "
+                    f"a multiple of the CIM core n_dim "
+                    f"({manifest.CORE_N}) nor the full axis ({an})"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pass 5: retrace guard
+# ---------------------------------------------------------------------------
+def retrace_audit(jit_fns: dict, limits: dict) -> list:
+    """After an engine has been driven through admit / evict / preempt
+    transitions, each jitted step function must have stayed on its
+    trace cache: ``jit_fns`` maps name -> jitted callable, ``limits``
+    maps name -> max tolerated cache entries (1 for shape-stable steps).
+    A count above the limit means some engine transition changed an
+    argument shape/dtype and recompiled the step — the per-step
+    recompile tax continuous batching exists to avoid."""
+    out = []
+    for name, fn in jit_fns.items():
+        size = getattr(fn, "_cache_size", None)
+        if size is None:
+            out.append(Violation(
+                "retrace", "not_jitted", name,
+                f"engine step {name!r} exposes no trace cache — it is "
+                f"not a jit-compiled function"))
+            continue
+        n = size()
+        limit = limits.get(name, 1)
+        if n > limit:
+            out.append(Violation(
+                "retrace", "trace_cache_miss", name,
+                f"engine step {name!r} holds {n} traces (limit {limit}) "
+                f"— some admit/evict/preempt transition retraced it"))
+        elif n == 0:
+            out.append(Violation(
+                "retrace", "never_traced", name,
+                f"engine step {name!r} was never executed by the audit "
+                f"scenario — the guard proved nothing"))
+    return out

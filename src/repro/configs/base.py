@@ -10,7 +10,7 @@ number of scan bodies.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.models.mla import MLAConfig

@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.mla import MLAConfig
-from repro.models.moe import MoEConfig
 from repro.models.ssm import SSMConfig
 from repro.models.xlstm import XLSTMConfig
 

@@ -20,8 +20,8 @@ from dataclasses import dataclass
 from .energy import DEFAULT_ENERGY_MODEL, EnergyModel
 from .hardware import TPUConfig
 from .simulator import simulate_graph
-from .workloads import (ModelSpec, TransformerLayerSpec, dit_graph,
-                        llm_decode_graph, llm_prefill_graph)
+from .workloads import (ModelSpec, dit_graph, llm_decode_graph,
+                        llm_prefill_graph)
 
 
 @dataclass

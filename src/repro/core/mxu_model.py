@@ -25,7 +25,6 @@ Two models with one interface:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 from .hardware import CIMMXUConfig, SystolicMXUConfig, TPUConfig

@@ -13,8 +13,7 @@ matmuls fold batch into M with ``weights_shared=True``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 from .operators import Graph, MatMulOp, OpKind, VectorOp
 

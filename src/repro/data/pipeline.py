@@ -15,7 +15,6 @@ indexing is written for multi-host).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterator, Optional

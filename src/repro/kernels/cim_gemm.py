@@ -103,6 +103,45 @@ def _fit(dim: int, block: int) -> int:
     return max(1, block)
 
 
+# Static per-dispatch VMEM ceiling the block pickers respect: blocks +
+# scratch stay at or below half of the 16 MiB TPU VMEM so the scheduler
+# keeps double-buffering headroom.  The jaxpr auditor
+# (repro.analysis, `make audit`) enforces the full budget on every
+# traced step, so a picker that busts this shows up before it ships.
+VMEM_TARGET_BYTES = 8 * 1024 * 1024
+
+
+def _fit_rows(m_dim: int, block_m: int, row_bytes: int) -> int:
+    """Shrink ``block_m`` (floor 8 rows) until ``block_m * row_bytes``
+    fits the VMEM target, then fit it to divide ``m_dim``.  Row-wise
+    kernels are bit-identical under any row blocking, so this only
+    trades dispatch-grid granularity for footprint."""
+    while block_m > 8 and block_m * row_bytes > VMEM_TARGET_BYTES:
+        block_m //= 2
+    return _fit(m_dim, block_m)
+
+
+def _fit_qout_blocks(M: int, K: int, N: int, block_m: int, block_k: int,
+                     n_mats: int, x_bytes: int = 1,
+                     has_bias: bool = False) -> tuple[int, int]:
+    """Block sizes for a ``quantize_out`` GEMM: the cross-N row
+    reduction pins a full-N block, so VMEM is bought back by shrinking
+    ``block_k`` (weight-stream granularity, floor CORE_K) and then
+    ``block_m`` (rows in flight, floor 8).  ``n_mats`` is the number of
+    weight matrices streamed (2 for the gated kernel), which also sets
+    the int32 scratch accumulator count."""
+    def fp(bm: int, bk: int) -> int:
+        fixed = n_mats * bk * N + n_mats * 4 * N + (4 * N if has_bias
+                                                   else 0)
+        per_row = bk * x_bytes + 4 + N + 4 + n_mats * 4 * N
+        return fixed + bm * per_row
+    while block_k > CORE_K and fp(block_m, block_k) > VMEM_TARGET_BYTES:
+        block_k //= 2
+    while block_m > 8 and fp(block_m, block_k) > VMEM_TARGET_BYTES:
+        block_m //= 2
+    return _fit(M, block_m), _fit(K, block_k)
+
+
 def _apply_activation(x: jax.Array, activation: str | None) -> jax.Array:
     if activation is None:
         return x
@@ -197,7 +236,9 @@ def quantize_rows_int8(x: jax.Array, block_m: int = 256,
     extent sits in one block (the absmax is a row reduction).
     """
     M, K = x.shape
-    block_m = _fit(M, block_m)
+    # full-K row blocks: cap rows in flight so huge hidden dims (the
+    # standalone requant for d_ff > MAX_FUSED_QUANT_N) stay in budget
+    block_m = _fit_rows(M, block_m, K * (x.dtype.itemsize + 1) + 4)
     grid = (M // block_m,)
     return pl.pallas_call(
         _rowquant_kernel,
@@ -290,9 +331,15 @@ def cim_gemm_int8_fused(x: jax.Array, w: jax.Array, x_scale: jax.Array,
     assert not (quantize_out and residual is not None), \
         "residual epilogue is for the block output, not a requantized mid"
 
-    block_m = _fit(M, block_m)
-    block_k = _fit(K, block_k)
-    block_n = N if quantize_out else _fit(N, block_n)
+    if quantize_out:
+        block_n = N
+        block_m, block_k = _fit_qout_blocks(M, K, N, block_m, block_k,
+                                            n_mats=1,
+                                            has_bias=bias is not None)
+    else:
+        block_m = _fit(M, block_m)
+        block_k = _fit(K, block_k)
+        block_n = _fit(N, block_n)
 
     n_k_steps = K // block_k
     grid = (M // block_m, N // block_n, n_k_steps)
@@ -489,9 +536,14 @@ def cim_gated_gemm_int8(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     assert x_scale.shape == (M, 1), x_scale.shape
     assert gate_scale.shape == (1, N) and up_scale.shape == (1, N)
 
-    block_m = _fit(M, block_m)
-    block_k = _fit(K, block_k)
-    block_n = N if quantize_out else _fit(N, block_n)
+    if quantize_out:
+        block_n = N
+        block_m, block_k = _fit_qout_blocks(M, K, N, block_m, block_k,
+                                            n_mats=2)
+    else:
+        block_m = _fit(M, block_m)
+        block_k = _fit(K, block_k)
+        block_n = _fit(N, block_n)
 
     n_k_steps = K // block_k
     grid = (M // block_m, N // block_n, n_k_steps)
@@ -661,9 +713,15 @@ def cim_grouped_gemm_int8(x: jax.Array, w: jax.Array, x_scale: jax.Array,
     assert x_scale.shape == (E, M, 1), x_scale.shape
     assert w_scale.shape == (E, 1, N), w_scale.shape
 
-    block_m = _fit(M, block_m)
-    block_k = _fit(K, block_k)
-    block_n = N if quantize_out else _fit(N, block_n)
+    if quantize_out:
+        block_n = N
+        block_m, block_k = _fit_qout_blocks(M, K, N, block_m, block_k,
+                                            n_mats=1,
+                                            has_bias=bias is not None)
+    else:
+        block_m = _fit(M, block_m)
+        block_k = _fit(K, block_k)
+        block_n = _fit(N, block_n)
 
     n_k_steps = K // block_k
     grid = (E, M // block_m, N // block_n, n_k_steps)
@@ -780,9 +838,14 @@ def cim_grouped_gated_gemm_int8(x: jax.Array, w_gate: jax.Array,
     assert x_scale.shape == (E, M, 1), x_scale.shape
     assert gate_scale.shape == (E, 1, N) and up_scale.shape == (E, 1, N)
 
-    block_m = _fit(M, block_m)
-    block_k = _fit(K, block_k)
-    block_n = N if quantize_out else _fit(N, block_n)
+    if quantize_out:
+        block_n = N
+        block_m, block_k = _fit_qout_blocks(M, K, N, block_m, block_k,
+                                            n_mats=2)
+    else:
+        block_m = _fit(M, block_m)
+        block_k = _fit(K, block_k)
+        block_n = _fit(N, block_n)
 
     n_k_steps = K // block_k
     grid = (E, M // block_m, N // block_n, n_k_steps)

@@ -24,7 +24,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 
 from repro.configs import ARCH_IDS, ASSIGNED_SHAPES, SHAPES, \
     cell_applicable, get_config

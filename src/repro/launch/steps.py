@@ -16,11 +16,10 @@ import jax.numpy as jnp
 
 from repro import optim
 from repro.configs import ModelConfig, SHAPES, input_specs
-from repro.configs.shapes import ShapeCell
 from repro.models import build_model
 from repro.parallel.context import sharding_context
 from repro.parallel.sharding import (DEFAULT_RULES, input_shardings,
-                                     make_shardings, replicated)
+                                     make_shardings)
 
 
 @dataclass

@@ -11,7 +11,6 @@ kept factored ([B, Sq, KH, G, D]) so KV is never repeated in memory.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 

@@ -19,7 +19,7 @@ Logical axis names (resolved by repro.parallel.sharding):
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

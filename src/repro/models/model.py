@@ -29,7 +29,7 @@ from . import mla as mla_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
 from . import xlstm as xlstm_mod
-from .layers import (Param, embedding_apply, embedding_attend, embedding_init,
+from .layers import (embedding_apply, embedding_attend, embedding_init,
                      linear_param, lm_head_apply, lm_head_init, make_norm,
                      mlp_apply, mlp_init, norm_apply, param_axes,
                      param_values)

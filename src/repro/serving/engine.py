@@ -40,8 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .lifecycle import (EngineStallError, LifecycleMixin, RequestStatus,
-                        TERMINAL_STATUSES)
+from .lifecycle import (EngineStallError, LifecycleMixin,
+                        RequestStatus)
 from .paged_cache import PoolExhausted
 
 

@@ -18,11 +18,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from pathlib import Path
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro import optim
 from repro.checkpoint import Checkpointer

@@ -1,0 +1,92 @@
+"""Regression tests for the bench-trajectory writer's suite-scoped
+pruning (BENCH_kernels.json).
+
+The historical bug: a "full run" blindly discarded every existing row,
+and a ``--skip-kernels`` smoke run never pruned anything — so a smoke
+run after a bench rename left stale simulator rows forever, while an
+interrupted full-run environment (e.g. kernels measured elsewhere)
+clobbered row families it never measured.  Pruning is now keyed off the
+suites that actually ran.
+"""
+import json
+
+from benchmarks.bench_kernels import suite_of, write_bench_json
+
+
+def _read(path):
+    with open(path) as f:
+        return json.load(f)["benches"]
+
+
+def _seed(path):
+    rows = [("kernel_cim_gemm_512_fused", 1.0, "k"),
+            ("kernel_stale_old_name", 2.0, "k"),
+            ("resilience_ber_1e-06", 3.0, "r"),
+            ("serving_throughput", 4.0, "s"),
+            ("sim_decode_us", 5.0, "sim"),
+            ("sim_stale_row", 6.0, "sim")]
+    write_bench_json(rows, str(path), full_run=True)
+    return rows
+
+
+class TestSuiteOf:
+    def test_prefix_classification(self):
+        assert suite_of("kernel_cim_gemm_512_fused") == "kernels"
+        assert suite_of("decode_attn_splitkv") == "kernels"
+        assert suite_of("dit_tp_s2") == "kernels"
+        assert suite_of("resilience_ber_1e-06") == "resilience"
+        assert suite_of("ecc_scrub_us") == "resilience"
+        assert suite_of("serving_throughput") == "serving"
+        assert suite_of("sim_decode_us") == "simulator"
+        assert suite_of("explore_sweep_warm") == "simulator"
+
+
+class TestSuiteScopedPruning:
+    def test_smoke_run_prunes_only_suites_that_ran(self, tmp_path):
+        """A --skip-kernels smoke run (simulator + serving measured)
+        prunes the stale simulator row but must NOT drop the kernel /
+        resilience rows it never measured."""
+        path = tmp_path / "BENCH.json"
+        _seed(path)
+        write_bench_json([("sim_decode_us", 5.5, "sim"),
+                          ("serving_throughput", 4.5, "s")],
+                         str(path), ran_suites={"simulator", "serving"})
+        benches = _read(path)
+        assert "sim_stale_row" not in benches          # pruned: suite ran
+        assert "kernel_stale_old_name" in benches      # kept: suite skipped
+        assert "resilience_ber_1e-06" in benches
+        assert benches["sim_decode_us"]["us"] == 5.5   # updated in place
+
+    def test_full_run_prunes_everywhere(self, tmp_path):
+        path = tmp_path / "BENCH.json"
+        _seed(path)
+        write_bench_json([("kernel_cim_gemm_512_fused", 1.1, "k")],
+                         str(path), full_run=True)
+        benches = _read(path)
+        assert set(benches) == {"kernel_cim_gemm_512_fused"}
+
+    def test_single_module_run_is_merge_plus_suite_prune(self, tmp_path):
+        """``python -m benchmarks.bench_kernels`` passes
+        ran_suites={"kernels"}: stale kernel rows go, everything else
+        stays."""
+        path = tmp_path / "BENCH.json"
+        _seed(path)
+        write_bench_json([("kernel_cim_gemm_512_fused", 1.2, "k")],
+                         str(path), ran_suites={"kernels"})
+        benches = _read(path)
+        assert "kernel_stale_old_name" not in benches
+        assert "sim_stale_row" in benches
+        assert "serving_throughput" in benches
+
+    def test_no_suites_is_pure_merge(self, tmp_path):
+        path = tmp_path / "BENCH.json"
+        rows = _seed(path)
+        write_bench_json([("kernel_new_bench", 9.0, "k")], str(path))
+        benches = _read(path)
+        assert len(benches) == len(rows) + 1
+
+    def test_missing_file_starts_fresh(self, tmp_path):
+        path = tmp_path / "BENCH.json"
+        write_bench_json([("sim_decode_us", 1.0, "sim")], str(path),
+                         ran_suites={"simulator"})
+        assert set(_read(path)) == {"sim_decode_us"}

@@ -4,7 +4,6 @@ Validates the paper's headline claims (Table II, Fig 6, Fig 7, Fig 8)
 against the simulator, plus structural invariants of the timing/energy
 models and the mapping engine.
 """
-import math
 
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -12,7 +11,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (
     DEFAULT_ENERGY_MODEL as EM,
     MatMulOp, OpKind, VectorOp,
-    cim_tpu, design_a, design_b, exploration_configs, get_hardware,
+    cim_tpu, design_a, design_b, get_hardware,
     tpuv4i_baseline,
     matmul_cost, simulate_graph, simulate_op,
     llm_prefill_cost, llm_decode_cost, dit_inference_cost,
@@ -20,7 +19,7 @@ from repro.core import (
     pipeline_parallel_llm_cost, tensor_parallel_llm_cost,
     mxu_area_mm2,
 )
-from repro.core.workloads import gpt3_30b, dit_xl2, llm_decode_graph
+from repro.core.workloads import gpt3_30b, llm_decode_graph
 
 
 BASE = tpuv4i_baseline()

@@ -32,14 +32,9 @@ KEY = jax.random.PRNGKey(0)
 CFG = get_dit_config("dit-test")
 
 
-def iter_jaxpr_eqns(jx):
-    for eqn in jx.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):
-                yield from iter_jaxpr_eqns(v.jaxpr)
-            elif hasattr(v, "eqns"):
-                yield from iter_jaxpr_eqns(v)
+from repro.analysis import iter_eqns as iter_jaxpr_eqns  # noqa: E402
+from repro.analysis import jaxpr_tools as jt  # noqa: E402
+from repro.analysis import manifest, passes  # noqa: E402
 
 
 def _dot_general_macs(eqn) -> int:
@@ -147,14 +142,14 @@ class TestDiTQuant:
         assert (np.asarray(b1["attn"]["qkv"].q) ==
                 np.asarray(b2["attn"]["qkv"].q)).all()
 
-    def test_full_plan_denoise_step_is_six_dispatches(self):
-        """Acceptance bar: a full-plan DiT-block denoise step is exactly
-        6 fused Pallas dispatches — 1 adaLN modulation GEMM (bias in the
-        epilogue) + 1 wide QKV + 1 out-projection + 3 MLP (quantize, up
-        GEMM w/ gelu + in-epilogue requant, down GEMM) — and because the
-        N blocks scan over stacked params, the whole-model forward
-        traces those same 6 kernels.  No kernel emits int32 to HBM; no
-        XLA dot_general consumes int8.  Structural on the jaxpr."""
+    def test_full_plan_denoise_step_matches_manifest(self):
+        """Acceptance bar: a full-plan DiT-block denoise step executes
+        exactly the manifest's schedule (6 fused Pallas dispatches at
+        these dims: adaLN modulation GEMM + wide QKV + out-projection +
+        the 3-dispatch MLP pipeline) — and because the N blocks scan
+        over stacked params, the whole-model forward traces those same
+        kernels.  Dtype flow is clean: no int32 to HBM, no XLA int8
+        dot, no XLA dequant.  Structural on the jaxpr."""
         m, params = _model_and_params()
         qparams = m.quantize(params)
         x = _latents(jax.random.PRNGKey(1))
@@ -163,11 +158,11 @@ class TestDiTQuant:
         with kernel_mode(True):
             jaxpr = jax.make_jaxpr(
                 lambda p, a, b, c: m.forward(p, a, b, c))(qparams, x, t, y)
-        kernels = [e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
-                   if e.primitive.name == "pallas_call"]
-        assert len(kernels) == 6, [k.outvars for k in kernels]
-        for k in kernels:
-            assert all(v.aval.dtype != jnp.int32 for v in k.outvars)
+        expected = manifest.dit_sites(CFG)
+        assert sum(expected.values()) == 6               # the paper bar
+        assert passes.dispatch_audit(jt.pallas_sites(jaxpr),
+                                     expected) == []
+        assert passes.dtype_flow_audit(jaxpr, phase="step") == []
 
     def test_dispatch_count_constant_in_depth(self):
         """Doubling the block count changes nothing structurally — the
@@ -183,9 +178,9 @@ class TestDiTQuant:
                 jaxpr = jax.make_jaxpr(
                     lambda p, a, b, c, mm=m: mm.forward(p, a, b, c))(
                         qparams, x, zeros, zeros)
-            counts[L] = len([e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
-                             if e.primitive.name == "pallas_call"])
-        assert counts[2] == counts[4] == 6, counts
+            counts[L] = len(jt.pallas_sites(jaxpr))
+        assert counts[2] == counts[4] == \
+            sum(manifest.dit_sites(CFG).values()), counts
 
     def test_traced_block_macs_match_dit_block_ops(self):
         """Acceptance bar: the executable DiT block's traced MAC count

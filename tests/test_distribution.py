@@ -4,12 +4,10 @@ host devices, which must be set before jax initializes)."""
 import json
 from pathlib import Path
 
-import jax
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
-from repro.parallel.sharding import (DEFAULT_RULES, batch_sharding,
-                                     resolve_spec)
+from repro.parallel.sharding import batch_sharding, resolve_spec
 
 from conftest import run_forced_devices_subprocess as _run_subprocess
 

@@ -9,7 +9,7 @@ from repro.models.attention import (blockwise_attention, dense_attention,
                                     attention_init, attention_apply,
                                     init_kv_cache)
 from repro.models.ssm import SSMConfig, mamba2_apply, mamba2_init, ssd_chunked
-from repro.models.xlstm import (XLSTMConfig, mlstm_decode_step, mlstm_scan)
+from repro.models.xlstm import mlstm_decode_step, mlstm_scan
 from repro.models.moe import MoEConfig, moe_apply, moe_init
 from repro.models.layers import param_values
 

@@ -7,7 +7,9 @@ import pytest
 from repro.models.attention import attention_apply, attention_init
 from repro.models.layers import mlp_apply, mlp_init, param_values
 from repro.models.moe import MoEConfig, moe_apply, moe_init
-from repro.quant import (dequantize_tree, kernel_mode, plan_is_applied,
+from repro.analysis import manifest, passes
+from repro.analysis import jaxpr_tools as jt
+from repro.quant import (kernel_mode, plan_is_applied,
                          quantize_attention, quantize_mlp,
                          quantize_moe_experts, quantized_mlp_apply,
                          quantized_moe_apply, quantized_moe_apply_looped,
@@ -15,21 +17,6 @@ from repro.quant import (dequantize_tree, kernel_mode, plan_is_applied,
 from repro.quant.linear import quantize_linear, quantized_matmul
 
 KEY = jax.random.PRNGKey(0)
-
-
-def iter_jaxpr_eqns(jx, into_pallas=True):
-    """Yield every eqn, recursing into sub-jaxprs (pjit/scan/...).
-    ``into_pallas=False`` stops at pallas_call boundaries, so the caller
-    sees only XLA-level ops."""
-    for eqn in jx.eqns:
-        yield eqn
-        if eqn.primitive.name == "pallas_call" and not into_pallas:
-            continue
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):
-                yield from iter_jaxpr_eqns(v.jaxpr, into_pallas)
-            elif hasattr(v, "eqns"):
-                yield from iter_jaxpr_eqns(v, into_pallas)
 
 
 class TestQuantizedLinear:
@@ -111,10 +98,11 @@ class TestQuantizedMLP:
             assert "gate" in qparams   # exercised the gated fused kernel
 
     def test_fused_pipeline_structure(self):
-        """The fused gated MLP is exactly one quantize kernel + two fused
-        GEMM kernels, and no kernel emits an HBM-resident int32
-        accumulator (the acceptance bar for the epilogue fusion).
-        Checked structurally on the jaxpr — no kernel execution, fast."""
+        """The fused gated MLP matches the manifest's pipeline profile
+        (quantize + two fused GEMMs at these dims) and no kernel emits
+        an HBM-resident int32 accumulator (the acceptance bar for the
+        epilogue fusion).  Checked structurally on the jaxpr — no kernel
+        execution, fast."""
         d, ff = 64, 128
         params = param_values(mlp_init(KEY, d, ff, "geglu",
                                        dtype=jnp.float32))
@@ -123,27 +111,14 @@ class TestQuantizedMLP:
         jaxpr = jax.make_jaxpr(
             lambda a: quantized_mlp_apply(qparams, a, "geglu",
                                           use_kernel=True))(x)
-
-        def iter_eqns(jx):
-            # duck-typed (jax.core.{Jaxpr,ClosedJaxpr} moved between
-            # jax versions): anything with .eqns is a jaxpr, anything
-            # with .jaxpr wraps one
-            for eqn in jx.eqns:
-                yield eqn
-                for v in eqn.params.values():
-                    if hasattr(v, "jaxpr"):
-                        yield from iter_eqns(v.jaxpr)
-                    elif hasattr(v, "eqns"):
-                        yield from iter_eqns(v)
-
-        kernels = [e for e in iter_eqns(jaxpr.jaxpr)
-                   if e.primitive.name == "pallas_call"]
-        assert len(kernels) == 3, [k.outvars for k in kernels]
-        for k in kernels:
-            assert all(v.aval.dtype != jnp.int32 for v in k.outvars)
-        # no XLA dequant/activation between kernels: the only f32 tensor
-        # any kernel emits is the final down-projection output
-        f32_outs = [v for k in kernels for v in k.outvars
+        sites = jt.pallas_sites(jaxpr)
+        assert passes.dispatch_audit(sites,
+                                     manifest.mlp_sites(ff)) == []
+        assert jt.int32_escapes(jaxpr) == []
+        # no XLA dequant/activation between kernels: the only wide f32
+        # tensor any kernel emits is the final down-projection output
+        # (narrow f32 outvars are the per-row quantization scales)
+        f32_outs = [v for s in sites for v in s.eqn.outvars
                     if v.aval.dtype == jnp.float32 and v.aval.shape[-1] > 1]
         assert len(f32_outs) == 1
 
@@ -335,10 +310,11 @@ class TestQuantizedMoE:
                                    rtol=1e-4, atol=1e-5)
 
     def test_dispatch_count_constant_in_experts(self):
-        """Acceptance bar: the MoE expert pipeline is a constant number of
-        Pallas dispatches (quantize + grouped gated GEMM + grouped down
-        GEMM = 3) whether the layer has 2 experts or 16.  Structural on
-        the jaxpr — no kernel execution."""
+        """Acceptance bar: the MoE expert pipeline is a constant number
+        of Pallas dispatches (the manifest's grouped profile: quantize +
+        grouped gated GEMM + grouped down GEMM) whether the layer has 2
+        experts or 16.  Structural on the jaxpr — no kernel execution."""
+        expected = manifest.mlp_pipeline_dispatches(24, grouped=True)
         counts = {}
         for E in (2, 16):
             qparams = self._moe_weights(E, 36, 24)
@@ -346,9 +322,8 @@ class TestQuantizedMoE:
             jaxpr = jax.make_jaxpr(
                 lambda a, q=qparams: quantized_moe_apply(
                     q, a, "swiglu", use_kernel=True))(xe)
-            counts[E] = len([e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
-                             if e.primitive.name == "pallas_call"])
-        assert counts[2] == counts[16] == 3, counts
+            counts[E] = len(jt.pallas_sites(jaxpr))
+        assert counts[2] == counts[16] == expected, counts
 
     @pytest.mark.slow
     def test_zero_capacity_skip_list_bitwise(self):
@@ -375,7 +350,8 @@ class TestQuantizedMoE:
 
     def test_skip_list_keeps_dispatch_count(self):
         """The skip list rides the existing grouped dispatches as a
-        scalar-prefetch operand — no extra Pallas kernels."""
+        scalar-prefetch operand — no extra Pallas kernels, and the
+        dispatch audit sees the prefetch the manifest requires."""
         E = 4
         qparams = self._moe_weights(E, 36, 24)
         xe = jnp.zeros((E, 5, 36))
@@ -384,9 +360,9 @@ class TestQuantizedMoE:
             lambda a, c, q=qparams: quantized_moe_apply(
                 q, a, "swiglu", use_kernel=True, expert_counts=c))(xe,
                                                                    counts)
-        n = len([e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
-                 if e.primitive.name == "pallas_call"])
-        assert n == 3, n
+        sites = jt.pallas_sites(jaxpr)
+        assert passes.dispatch_audit(
+            sites, manifest.mlp_sites(24, grouped=True)) == []
 
 
 class TestQuantPlan:
@@ -431,15 +407,14 @@ class TestQuantPlan:
         b, _, _ = m.forward(shim, x)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
-    def test_full_plan_decode_is_six_fused_dispatches(self):
+    def test_full_plan_decode_matches_manifest(self):
         """Acceptance bar: one decode step of a dense attention+MLP block
-        executes exactly 6 fused Pallas dispatches — its ENTIRE compute,
-        attention included: 1 QKV (quantize-in-kernel), 1 flash-decode
-        attention over the KV cache, 1 out-proj with fused residual,
-        3 MLP (quantize + gated GEMM + down GEMM w/ residual) — with no
-        int32/f32 GEMM intermediates: no kernel emits int32 to HBM and
-        no XLA dot_general consumes int8.  Structural on the jaxpr — no
-        kernel execution."""
+        executes exactly the manifest's dispatch schedule (6 fused Pallas
+        dispatches at reduced dims — its ENTIRE compute, attention
+        included) with clean dtype flow: no kernel emits int32 to HBM,
+        no XLA dot_general consumes int8, no int8 tensor is dequantized
+        at the XLA level.  Structural on the jaxpr — no kernel
+        execution."""
         m, params = self._model()
         assert m.groups == [(("attn", "dense"), 4)]      # one scan body
         qparams = m.quantize(params)
@@ -449,24 +424,17 @@ class TestQuantPlan:
             jaxpr = jax.make_jaxpr(
                 lambda p, b, c: m.decode_step(p, b, c))(qparams, batch,
                                                         cache)
-        kernels = [e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
-                   if e.primitive.name == "pallas_call"]
-        assert len(kernels) == 6, [k.outvars for k in kernels]
-        for k in kernels:
-            assert all(v.aval.dtype != jnp.int32 for v in k.outvars)
-        # int8 tensors live only between pallas kernels, never in XLA
-        # GEMMs; f32 GEMM outputs exist only as final fused-epilogue
-        # emissions (QKV, out-proj, down-proj — the attention kernel
-        # emits at the activation dtype)
-        xla_int8_dots = [
-            e for e in iter_jaxpr_eqns(jaxpr.jaxpr, into_pallas=False)
-            if e.primitive.name == "dot_general"
-            and any(getattr(v.aval, "dtype", None) == jnp.int8
-                    for v in e.invars)]
-        assert not xla_int8_dots
-        wide_f32 = [v for k in kernels for v in k.outvars
+        sites = jt.pallas_sites(jaxpr)
+        expected = manifest.model_sites(m, "decode", kv_len=16)
+        assert sum(expected.values()) == 6               # the paper bar
+        assert passes.dispatch_audit(sites, expected) == []
+        assert passes.dtype_flow_audit(jaxpr) == []
+        # f32 GEMM outputs exist only as final fused-epilogue emissions
+        # (QKV, out-proj(+res), down(+res) — the attention kernel emits
+        # at the activation dtype)
+        wide_f32 = [v for s in sites for v in s.eqn.outvars
                     if v.aval.dtype == jnp.float32 and v.aval.shape[-1] > 1]
-        assert len(wide_f32) == 3   # QKV, out-proj(+res), down(+res)
+        assert len(wide_f32) == 3
 
     def test_full_plan_forward_close_to_bf16(self):
         m, params = self._model()
@@ -492,18 +460,15 @@ class TestQuantPlan:
 
     def test_full_plan_moe_decode_dispatches_constant_in_experts(self):
         """Acceptance bar: a full-plan MoE-block decode step pins expert
-        compute at a constant number of Pallas dispatches independent of
-        the expert count — 9 per block: 1 QKV + 1 flash-decode attention
-        + 1 out-proj (w/ residual) + 3 for ALL routed experts (quantize +
-        grouped gated GEMM + grouped down GEMM, expert index a kernel
-        grid dim) + 3 for the shared-expert MLP.  The per-expert loop
-        this replaces traced 3·E + 6.  Structural on the jaxpr — no
+        compute at the manifest's dispatch schedule independent of the
+        expert count (9 per block at reduced dims: attention + grouped
+        routed pipeline + shared-expert MLP; the per-expert loop this
+        replaces traced 3·E + 6).  Structural on the jaxpr — no
         execution."""
         import dataclasses
         from repro.configs import get_config, reduced_config
         from repro.models import build_model
 
-        counts = {}
         for E in (4, 16):
             cfg = reduced_config(get_config("qwen2-moe-a2.7b"))
             cfg = dataclasses.replace(
@@ -516,6 +481,7 @@ class TestQuantPlan:
                 jaxpr = jax.make_jaxpr(
                     lambda p, b, c, mm=m: mm.decode_step(p, b, c))(
                         qparams, batch, cache)
-            counts[E] = len([e for e in iter_jaxpr_eqns(jaxpr.jaxpr)
-                             if e.primitive.name == "pallas_call"])
-        assert counts[4] == counts[16] == 9, counts
+            expected = manifest.model_sites(m, "decode", kv_len=16)
+            assert sum(expected.values()) == 9           # the paper bar
+            assert passes.dispatch_audit(jt.pallas_sites(jaxpr),
+                                         expected) == []

@@ -1,7 +1,6 @@
 """Substrate tests: data pipeline, checkpointing (+restart +re-mesh),
 trainer fault tolerance, optimizer; the serving-engine tests moved to
 tests/test_serving.py."""
-import math
 
 import jax
 import jax.numpy as jnp

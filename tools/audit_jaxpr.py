@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Audit the CIM execution contract over the registry (`make audit`).
+
+Traces every full-plan arch abstractly (prefill / ring decode / paged
+decode; split-KV; TP-sharded where devices allow; DiT step), runs the
+static passes against the manifest, drives the serving retrace guard,
+and prints one diff line per matrix cell.  Exit status 1 when any cell
+fails.
+
+Usage:
+    PYTHONPATH=src python tools/audit_jaxpr.py [--target SUBSTR]
+        [--json PATH] [--no-tp] [--no-retrace]
+
+The TP cells need two host devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=2
+(`make audit` sets this.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Matrix rows beyond the all-archs x all-phases sweep: the TP per-shard
+# contract is checked on one dense and one MoE representative, split-KV
+# on the longest-context cheap arch.
+TP_ARCHS = ("gemma-2b", "qwen2-moe-a2.7b")
+SPLITKV_ARCH = "gemma-2b"
+SPLITKV_LEN = 4096
+DIT_ARCHS = ("dit-test", "dit-xl-2")
+
+
+def build_matrix(no_tp: bool, no_retrace: bool):
+    """(description, thunk) pairs — thunks return an AuditReport."""
+    import jax
+
+    from repro.analysis import (audit_dit, audit_lm,
+                                audit_serving_retrace, full_plan_archs)
+    cells = []
+    for arch in full_plan_archs():
+        for phase, paged in (("decode", False), ("decode", True),
+                             ("prefill", False)):
+            label = {("decode", False): "decode_ring",
+                     ("decode", True): "decode_paged",
+                     ("prefill", False): "prefill"}[(phase, paged)]
+            cells.append((f"{arch}/{label}",
+                          lambda a=arch, p=phase, g=paged:
+                          audit_lm(a, p, paged=g)))
+    cells.append((f"{SPLITKV_ARCH}/decode_ring/kv{SPLITKV_LEN}",
+                  lambda: audit_lm(SPLITKV_ARCH, "decode",
+                                   kv_len=SPLITKV_LEN)))
+    if not no_tp:
+        if len(jax.devices()) < 2:
+            print("audit: skipping TP cells — need 2 devices "
+                  "(XLA_FLAGS=--xla_force_host_platform_device_count=2)",
+                  file=sys.stderr)
+        else:
+            for arch in TP_ARCHS:
+                for paged in (False, True):
+                    label = "decode_paged" if paged else "decode_ring"
+                    cells.append((f"{arch}/{label}/tp2",
+                                  lambda a=arch, g=paged:
+                                  audit_lm(a, "decode", paged=g, tp=2)))
+    for arch in DIT_ARCHS:
+        cells.append((f"{arch}/step", lambda a=arch: audit_dit(a)))
+    if not no_retrace:
+        cells.append(("gemma-2b/serving_retrace", audit_serving_retrace))
+    return cells
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--target", default="",
+                    help="only run matrix cells whose name contains this")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable reports to PATH")
+    ap.add_argument("--no-tp", action="store_true",
+                    help="skip the TP-sharded cells")
+    ap.add_argument("--no-retrace", action="store_true",
+                    help="skip the (concrete-compute) serving retrace "
+                         "guard")
+    args = ap.parse_args(argv)
+
+    cells = [(name, fn) for name, fn in
+             build_matrix(args.no_tp, args.no_retrace)
+             if args.target in name]
+    if not cells:
+        print(f"audit: no matrix cells match {args.target!r}",
+              file=sys.stderr)
+        return 2
+
+    reports, failed = [], 0
+    for name, fn in cells:
+        rep = fn()
+        reports.append(rep)
+        for line in rep.diff_lines():
+            print(line)
+        if not rep.ok:
+            failed += 1
+
+    n_skip = sum(1 for r in reports if r.skipped)
+    print(f"audit: {len(reports) - failed - n_skip} ok, "
+          f"{failed} failed, {n_skip} skipped "
+          f"({len(reports)} matrix cells)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([r.to_dict() for r in reports], f, indent=1)
+        print(f"audit: wrote {args.json}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
