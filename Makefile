@@ -17,6 +17,10 @@
 # `make test-serving` runs the serving suite: block-allocator property
 # tests, the paged flash-decode bit-identity pins, both continuous-
 # batching engines (ring + paged), and the traffic-harness checks.
+# `make test-obs` runs the observability suite: metrics/exporters,
+# per-request span logs (deterministic, exactly-once close on every
+# terminal path), manifest-derived dispatch counts, and the energy
+# attribution vs the analytic simulator.
 # `make audit` proves the CIM execution contract statically: it traces
 # every full-plan arch abstractly (prefill / ring / paged decode,
 # split-KV, TP-2 per-shard, DiT) and diffs the pallas dispatch
@@ -34,7 +38,7 @@
 # measures the resilience_ber_* chaos rows).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-tp test-dit test-chaos test-attn test-serving bench verify docs-check audit lint
+.PHONY: test test-fast test-tp test-dit test-chaos test-attn test-serving test-obs bench verify docs-check audit lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -60,6 +64,9 @@ test-attn:
 test-serving:
 	$(PY) -m pytest -x -q tests/test_serving.py
 
+test-obs:
+	$(PY) -m pytest -x -q tests/test_obs.py
+
 docs-check:
 	$(PY) tools/check_docs.py
 
@@ -73,5 +80,5 @@ lint:
 bench:
 	$(PY) -m benchmarks.run
 
-verify: lint test-fast docs-check test-tp test-attn test-serving test-dit test-chaos audit
+verify: lint test-fast docs-check test-tp test-attn test-serving test-obs test-dit test-chaos audit
 	$(PY) -m benchmarks.run --skip-kernels

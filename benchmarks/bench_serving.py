@@ -22,6 +22,14 @@ sweeps take hours on CPU.
 including ``--skip-kernels`` verify runs, so the ``serving_*`` rows ride
 the same merge/prune path as every other row family — and the full sweep
 (thousands of requests) on full runs.
+
+The ``serving_paged_obs_overhead`` row reports the cost of fully-enabled
+observability (metrics, per-request tracing, live energy attribution —
+see :mod:`repro.obs`) relative to an engine step: every obs hook
+invocation is wall-timed in place during an instrumented traffic run and
+the per-step sum is divided by the uninstrumented engine's min-of-3 step
+wall.  The target is < 2% per engine step.  ``--snapshot PATH`` saves
+the instrumented run's obs snapshot for ``tools/obs_report.py``.
 """
 from __future__ import annotations
 
@@ -53,49 +61,55 @@ def make_workload(n, load, seed, vocab, max_prompt=24, max_out=8):
 def run_traffic(engine, workload, tick):
     """Submit ``workload`` on its arrival schedule, stepping the engine
     once per simulated step until everything drains.  ``tick`` is the
-    mutable step counter backing the engine's injected clock."""
+    mutable step counter backing the engine's injected clock.
+
+    TTFT/ITL quantiles come from the shared obs histogram
+    implementation (:mod:`repro.obs.metrics`) either way: an
+    instrumented engine's own ``ttft_steps``/``itl_steps`` histograms
+    are read directly, an uninstrumented one gets the same observations
+    replayed from the requests' lifecycle timestamps — so a reported
+    p50/p99 always means the same bucket-interpolated computation.
+    """
     import numpy as np
 
+    from repro.obs import Histogram
     from repro.serving import RequestStatus
 
     pending = list(workload)
-    inflight = []
-    finished_at = {}
     t0 = time.perf_counter()
     while pending or engine.pending():
         t = tick[0]
         while pending and pending[0][0] <= t:
-            req = pending.pop(0)[1]
-            engine.submit(req)
-            inflight.append(req)
+            engine.submit(pending.pop(0)[1])
         engine.step()
-        still = []
-        for req in inflight:
-            if req.done:
-                finished_at[req.uid] = t
-            else:
-                still.append(req)
-        inflight = still
         tick[0] += 1
         if tick[0] > 200_000:
             raise RuntimeError("traffic run did not drain")
     wall_us = (time.perf_counter() - t0) * 1e6
     steps = tick[0]
     ok = [r for _, r in workload if r.status is RequestStatus.OK]
-    ttft = np.array([r.first_token_at - r.submitted_at for r in ok
-                     if r.first_token_at is not None], float)
-    itl = np.array([(finished_at[r.uid] - r.first_token_at)
-                    / max(1, len(r.generated) - 1) for r in ok
-                    if r.first_token_at is not None], float)
+    obs = getattr(engine, "obs", None)
+    if obs is not None:
+        ttft_h, itl_h = obs.ttft_hist, obs.itl_hist
+    else:
+        ttft_h = Histogram("ttft_steps")
+        itl_h = Histogram("itl_steps")
+        for _, r in workload:
+            if r.first_token_at is None:
+                continue
+            ttft_h.observe(r.first_token_at - r.submitted_at)
+            if r.finished_at is not None and len(r.generated) >= 2:
+                itl_h.observe((r.finished_at - r.first_token_at)
+                              / (len(r.generated) - 1))
     util = engine.stats.cache_utilization
     return {
         "steps": steps,
         "us_per_step": wall_us / max(1, steps),
         "completed": len(ok),
         "goodput": sum(len(r.generated) for r in ok) / max(1, steps),
-        "p50_ttft": float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
-        "p99_ttft": float(np.percentile(ttft, 99)) if len(ttft) else 0.0,
-        "mean_itl": float(itl.mean()) if len(itl) else 0.0,
+        "p50_ttft": ttft_h.quantile(0.5),
+        "p99_ttft": ttft_h.quantile(0.99),
+        "mean_itl": itl_h.mean(),
         "util": float(np.mean(util)) if util else 0.0,
         "preemptions": engine.stats.preemptions,
     }
@@ -119,11 +133,12 @@ class StaticBatchEngine:
         return _Static(*a, **kw)
 
 
-def bench_serving(full: bool = False):
+def bench_serving(full: bool = False, snapshot_path=None):
     import jax
 
     from repro.configs import get_config, reduced_config
     from repro.models import build_model
+    from repro.obs import Observability
     from repro.quant import kernel_mode
     from repro.serving import PagedServingEngine
 
@@ -177,7 +192,105 @@ def bench_serving(full: bool = False):
                      f"num_blocks=12 n={n} goodput={m['goodput']:.2f}tok/step "
                      f"preemptions={m['preemptions']} "
                      f"util={m['util']:.2f} completed={m['completed']}/{n}"))
+        # observability overhead: accounted hook cost per engine step vs
+        # the uninstrumented engine's step wall.  Off-vs-on wall
+        # differencing cannot pin a sub-2% effect here — the host step
+        # wall moves a few percent trial to trial on a busy CPU, which
+        # swamps the signal and flips the sign run to run — so the
+        # numerator is measured directly: every obs hook invocation
+        # (metrics + tracing + live energy pricing) is timed in place
+        # during a full instrumented traffic run.  The smoke model's
+        # ~2ms step is degenerate for this ratio (hook cost per event is
+        # model-size-invariant, the denominator is not), so the pair
+        # serves a d_model=256 variant whose ~9ms step is the small end
+        # of a realistic serving step.
+        # GC is paused over the measured runs (as timing harnesses do):
+        # a collection triggered by a hook's allocation would charge the
+        # scan of whatever heap earlier in-process benches left behind
+        # to the hook timer, which is not an obs property.
+        import dataclasses
+        import gc
+        load = LOADS[-1][0]
+        n_ov = 96
+        ov_cfg = dataclasses.replace(cfg, name=cfg.name + "-obs",
+                                     d_model=256, d_ff=1024,
+                                     n_heads=4, head_dim=64)
+        ov_model = build_model(ov_cfg)
+        ov_params = ov_model.init(jax.random.PRNGKey(0))
+
+        def ov_engine(tick, **kw):
+            return PagedServingEngine(ov_model, ov_params, n_slots=4,
+                                      max_len=64, prefill_bucket=16,
+                                      block_size=8, prefill_chunk=16,
+                                      clock=lambda: float(tick[0]), **kw)
+
+        def measured_run(eng, tick):
+            """us/step of the measured workload only (the warmup steps
+            already on ``tick`` are excluded)."""
+            before = tick[0]
+            m = run_traffic(eng, make_workload(n_ov, load, seed=17,
+                                               vocab=ov_cfg.vocab), tick)
+            return m["us_per_step"] * m["steps"] \
+                / max(1, m["steps"] - before), m["steps"] - before
+
+        gc_was = gc.isenabled()
+        gc.collect()
+        gc.disable()
+        try:
+            off_us = float("inf")
+            for _ in range(3):
+                tick = [0]
+                eng = ov_engine(tick)
+                run_traffic(eng, make_workload(8, load, seed=23,
+                                               vocab=ov_cfg.vocab), tick)
+                us, _steps = measured_run(eng, tick)
+                off_us = min(off_us, us)
+            obs = Observability()
+            tick = [0]
+            eng = ov_engine(tick, obs=obs)
+            hook_s = _timed_hooks(obs)
+            run_traffic(eng, make_workload(8, load, seed=23,
+                                           vocab=ov_cfg.vocab), tick)
+            obs.reset()
+            hook_s[0] = 0.0
+            _us, steps = measured_run(eng, tick)
+        finally:
+            if gc_was:
+                gc.enable()
+        if snapshot_path is not None:
+            import json
+            with open(snapshot_path, "w") as f:
+                json.dump(obs.snapshot(), f, indent=1, sort_keys=True)
+        hooks_us = hook_s[0] * 1e6 / max(1, steps)
+        overhead = hooks_us / max(off_us, 1e-9)
+        rows.append(("serving_paged_obs_overhead", hooks_us,
+                     f"n={n_ov} d256 step={off_us:.0f}us "
+                     f"hooks={hooks_us:.1f}us/step "
+                     f"overhead={overhead * 100:+.2f}% target<2% "
+                     f"(accounted)"))
     return rows
+
+
+def _timed_hooks(obs):
+    """Wrap every ``on_*`` hook of ``obs`` with an in-place wall-clock
+    accumulator; returns the mutable ``[seconds]`` cell.  The wrapper
+    adds ~0.1us per invocation — charged to the hooks, so the reported
+    overhead is (slightly) conservative."""
+
+    def wrap(fn):
+        def timed(*a, **kw):
+            t0 = time.perf_counter()
+            try:
+                return fn(*a, **kw)
+            finally:
+                acc[0] += time.perf_counter() - t0
+        return timed
+
+    acc = [0.0]
+    for name in dir(obs):
+        if name.startswith("on_"):
+            setattr(obs, name, wrap(getattr(obs, name)))
+    return acc
 
 
 def main() -> None:
@@ -186,9 +299,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="thousand-request sweep (default: smoke N)")
+    ap.add_argument("--snapshot", metavar="PATH", default=None,
+                    help="write the instrumented run's obs snapshot "
+                         "JSON here (render with tools/obs_report.py)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for name, us, derived in bench_serving(full=args.full):
+    for name, us, derived in bench_serving(full=args.full,
+                                           snapshot_path=args.snapshot):
         print(f"{name},{us:.1f},{derived}")
 
 

@@ -53,6 +53,7 @@ class ImageRequest(LifecycleMixin):
     status: RequestStatus = RequestStatus.QUEUED
     error: Optional[str] = None
     submitted_at: float = 0.0
+    finished_at: Optional[float] = None    # engine clock; span close
 
 
 @dataclass
@@ -76,13 +77,15 @@ class DiffusionEngine:
                  schedule: DiffusionSchedule = DEFAULT_SCHEDULE,
                  max_queue: Optional[int] = None, degraded: bool = False,
                  health_checks: bool = True,
-                 fault_hook: Optional[Callable] = None, clock=None):
+                 fault_hook: Optional[Callable] = None, clock=None,
+                 obs=None):
         self.model = model
         self.mesh = mesh
         self.rules = rules
         if quant_plan is not None:
             params = model.quantize(params, quant_plan, mesh=mesh,
                                     rules=rules)
+        self.quant_plan = quant_plan
         self.params = params
         self.batch = batch_size
         self.schedule = schedule
@@ -95,6 +98,9 @@ class DiffusionEngine:
         self.queue: deque[ImageRequest] = deque()
         self.stats = DiffusionStats()
         self._samplers: dict = {}
+        self.obs = obs
+        if obs is not None:
+            obs.bind_dit_engine(self)
 
     # ------------------------------------------------------------------
     def _mesh_ctx(self):
@@ -132,7 +138,8 @@ class DiffusionEngine:
     # ------------------------------------------------------------------
     def _finish(self, req: ImageRequest, status: RequestStatus,
                 error: Optional[str] = None) -> RequestStatus:
-        req.finish(status, error)
+        now = self._clock()
+        req.finish(status, error, now=now)
         if status is RequestStatus.OK:
             self.stats.completed += 1
         elif status is RequestStatus.FAILED:
@@ -141,6 +148,8 @@ class DiffusionEngine:
             self.stats.timed_out += 1
         else:
             self.stats.rejected += 1
+        if self.obs is not None:
+            self.obs.on_finish(req, status, req.error, now)
         return status
 
     def submit(self, req: ImageRequest) -> RequestStatus:
@@ -173,6 +182,8 @@ class DiffusionEngine:
         req.submitted_at = self._clock()
         self.queue.append(req)
         self.stats.submitted += 1
+        if self.obs is not None:
+            self.obs.on_submit(req, req.submitted_at, len(self.queue))
         return RequestStatus.QUEUED
 
     def _noise(self, req: ImageRequest) -> jax.Array:
@@ -224,6 +235,11 @@ class DiffusionEngine:
             out = self.fault_hook("denoise", lat)
             if out is not None:
                 lat = np.asarray(out)
+        if self.obs is not None:
+            # CFG stacks conditional + null rows into one 2B batch, so
+            # a guided image costs two model evaluations per step
+            evals = head.num_steps * (2 if head.cfg_scale > 0.0 else 1)
+            self.obs.on_denoise_batch(batch, evals, self._clock())
         delivered = 0
         for i, r in enumerate(batch):
             if self.health_checks and not np.isfinite(lat[i]).all():

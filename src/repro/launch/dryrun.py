@@ -28,6 +28,7 @@ from pathlib import Path
 from repro.configs import ARCH_IDS, ASSIGNED_SHAPES, SHAPES, \
     cell_applicable, get_config
 from repro.launch import roofline as rf
+from repro.launch.console import emit
 from repro.launch.mesh import make_production_mesh, mesh_chip_count
 from repro.launch.steps import build_step
 from repro.parallel.sharding import DEFAULT_RULES
@@ -104,14 +105,14 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     )
     if verbose:
         gb = mem_d["total_bytes_per_device"] / 2**30
-        print(f"[{arch} x {shape} x {mesh_name}] OK "
+        emit(f"[{arch} x {shape} x {mesh_name}] OK "
               f"compile={t_compile:.0f}s mem/dev={gb:.2f}GiB "
               f"bottleneck={report.bottleneck} "
               f"roofline={report.roofline_fraction:.3f}")
-        print("  memory_analysis:", json.dumps(mem_d))
-        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+        emit("  memory_analysis:", json.dumps(mem_d))
+        emit("  cost_analysis: flops=%.3e bytes=%.3e" %
               (report.hlo_flops, report.hlo_bytes))
-        print("  collectives:", report.collective_counts,
+        emit("  collectives:", report.collective_counts,
               "wire_bytes=%.3e" % report.collective_wire_bytes)
     return record
 
@@ -160,10 +161,10 @@ def main() -> None:
         (out_dir / name).write_text(json.dumps(rec, indent=2, default=str))
         if rec["status"] == "failed":
             failures += 1
-            print(f"[{arch} x {shape}] FAILED: {rec['error']}")
+            emit(f"[{arch} x {shape}] FAILED: {rec['error']}")
         elif rec["status"] == "skipped":
-            print(f"[{arch} x {shape}] SKIPPED: {rec['reason']}")
-    print(f"\ndone: {len(cells)} cells, {failures} failures")
+            emit(f"[{arch} x {shape}] SKIPPED: {rec['reason']}")
+    emit(f"\ndone: {len(cells)} cells, {failures} failures")
     raise SystemExit(1 if failures else 0)
 
 

@@ -24,6 +24,8 @@ import re
 from dataclasses import dataclass, asdict
 from typing import Optional
 
+from repro.launch.console import emit
+
 # TPU v5e-like target constants (grading-harness mandated)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -317,12 +319,12 @@ def main() -> None:
     hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
            f"{'coll_s':>9s} {'bottleneck':>10s} {'roofline':>9s} "
            f"{'GiB/dev':>8s}")
-    print(hdr)
+    emit(hdr)
     for r in rows:
         if r["status"] != "ok":
-            print(f"{r['arch']:22s} {r['shape']:12s} SKIPPED")
+            emit(f"{r['arch']:22s} {r['shape']:12s} SKIPPED")
             continue
-        print(f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+        emit(f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
               f"{r['memory_s']:10.4f} {r['collective_s']:9.4f} "
               f"{r['bottleneck']:>10s} {r['roofline_fraction']:9.3f} "
               f"{r['mem_gib_per_dev']:8.2f}")

@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.launch.console import emit
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
 
@@ -40,7 +41,7 @@ def main() -> None:
     if args.int8:
         from repro.quant import QuantPlan
         plan = QuantPlan.full()
-        print(plan.describe(model.groups))
+        emit(plan.describe(model.groups))
     engine = ServingEngine(model, params, n_slots=args.slots,
                            max_len=args.max_len, prefill_bucket=16,
                            quant_plan=plan)
@@ -60,11 +61,11 @@ def main() -> None:
     dt = time.perf_counter() - t0
     st = engine.stats
     occ = float(np.mean(st.batch_occupancy)) if st.batch_occupancy else 0.0
-    print(f"served {len(reqs)} requests: {st.tokens_out} tokens in {dt:.2f}s "
+    emit(f"served {len(reqs)} requests: {st.tokens_out} tokens in {dt:.2f}s "
           f"({st.tokens_out/dt:.1f} tok/s), {st.decode_steps} decode steps, "
           f"mean occupancy {occ:.2f}")
     for r in reqs[:4]:
-        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.generated}")
+        emit(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.generated}")
 
 
 if __name__ == "__main__":

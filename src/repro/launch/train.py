@@ -18,6 +18,7 @@ import jax
 
 from repro import optim
 from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.launch.console import emit
 from repro.data import for_model
 from repro.models import build_model
 from repro.training import Trainer, TrainerConfig, simple_train_step
@@ -42,7 +43,7 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+    emit(f"arch={cfg.name} params={n_params/1e6:.2f}M "
           f"layers={cfg.n_layers} groups={len(cfg.layer_groups())}")
 
     ocfg = optim.AdamWConfig(learning_rate=args.lr)
@@ -55,11 +56,11 @@ def main() -> None:
                          log_every=5, checkpoint_dir=args.checkpoint_dir)
     trainer = Trainer(model, step, params, opt_state, pipe, tcfg)
     out = trainer.run()
-    print(json.dumps({"final_step": out["final_step"],
+    emit(json.dumps({"final_step": out["final_step"],
                       "final_loss": out["final_loss"],
                       "stragglers": len(out["stragglers"])}))
     for rec in out["history"]:
-        print(f"  step {rec['step']:5d} loss {rec['loss']:.4f} "
+        emit(f"  step {rec['step']:5d} loss {rec['loss']:.4f} "
               f"dt {rec['dt']*1e3:.0f}ms")
 
 

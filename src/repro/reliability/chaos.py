@@ -65,6 +65,11 @@ class ChaosMonkey:
         engine.fault_hook = self._hook
 
     # ------------------------------------------------------------------
+    def _obs_chaos(self, kind: str, **detail) -> None:
+        obs = getattr(self.engine, "obs", None)
+        if obs is not None:
+            obs.on_chaos(kind, self.engine._clock(), **detail)
+
     def _hook(self, phase: str, logits: np.ndarray):
         self._fetches += 1
         if self.fault.ber > 0.0 and self._fetches % self.period == 0:
@@ -77,6 +82,7 @@ class ChaosMonkey:
             self.engine.params = tree   # same avals: no retrace
             self.report.weight_injections += 1
             self.report.bits_faulted += rep.faults
+            self._obs_chaos("weight_injection", bits=rep.faults)
         if (self.logit_nan_rate > 0.0
                 and self._rng.random() < self.logit_nan_rate):
             logits = np.array(logits, copy=True)
@@ -84,6 +90,7 @@ class ChaosMonkey:
             row = int(self._rng.integers(flat.shape[0]))
             flat[row, int(self._rng.integers(flat.shape[1]))] = np.nan
             self.report.logit_hits += 1
+            self._obs_chaos("logit_nan", phase=phase, row=row)
             return logits
         return None
 

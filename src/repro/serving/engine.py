@@ -63,6 +63,7 @@ class Request(LifecycleMixin):
     error: Optional[str] = None
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None   # engine clock; TTFT source
+    finished_at: Optional[float] = None      # engine clock; span close
 
 
 @dataclass
@@ -81,6 +82,8 @@ class EngineStats:
     # paged-engine counters (zero on the ring engine)
     preemptions: int = 0        # sequences evicted for blocks, requeued
     prefill_chunks: int = 0     # chunked-prefill dispatches
+    pool_exhaustions: int = 0   # KV pool allocation failures (grow/admit)
+    evicted_blocks: int = 0     # blocks freed by preemption evictions
     cache_utilization: list = field(default_factory=list)
 
 
@@ -90,7 +93,8 @@ class ServingEngine:
                  quant_plan=None, quantize_mlp: bool = False,
                  mesh=None, rules=None, max_queue: Optional[int] = None,
                  degraded: bool = False, health_checks: bool = True,
-                 fault_hook: Optional[Callable] = None, clock=None):
+                 fault_hook: Optional[Callable] = None, clock=None,
+                 obs=None):
         """``mesh`` (a jax Mesh with a ``model`` axis) serves the
         quant-plan decode path tensor-parallel: quantized weights are
         device_put sharded per their logical axes (q + scale co-sharded
@@ -119,6 +123,11 @@ class ServingEngine:
           non-finite logits deterministically.
         * ``clock`` — injectable monotonic clock (seconds) for
           deadline/TTL accounting; defaults to ``time.monotonic``.
+        * ``obs`` — an :class:`repro.obs.Observability` instance.  Every
+          instrumentation point is host-side and guarded by a single
+          ``obs is not None`` check, so an uninstrumented engine runs
+          exactly the pre-obs code path (bitwise-identical outputs,
+          jaxpr/dispatch pins untouched).
         """
         self.model = model
         self.mesh = mesh
@@ -143,6 +152,7 @@ class ServingEngine:
             # of bf16 einsums + XLA elementwise ops.
             params = model.quantize(params, quant_plan, mesh=mesh,
                                     rules=rules)
+        self.quant_plan = quant_plan
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
@@ -165,6 +175,9 @@ class ServingEngine:
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
         self._build_steps()
+        self.obs = obs
+        if obs is not None:
+            obs.bind_llm_engine(self)
 
     # ------------------------------------------------------------------
     def _init_cache(self):
@@ -255,10 +268,22 @@ class ServingEngine:
         self._decode_all = decode_all
 
     # ------------------------------------------------------------------
+    def _obs_kv_slots(self) -> int:
+        """Cache positions a decode kernel streams per sequence — the
+        manifest's split-KV discriminant (the paged engine overrides
+        with its block-table capacity)."""
+        return self.max_len
+
     def _finish(self, req: Request, status: RequestStatus,
                 error: Optional[str] = None) -> RequestStatus:
-        """Move ``req`` to a terminal status and book it in the stats."""
-        req.finish(status, error)
+        """Move ``req`` to a terminal status and book it in the stats.
+
+        The single terminal funnel: ``req.finish`` enforces the
+        exactly-once transition, so the obs span-close hook here fires
+        exactly once per request on every terminal path.
+        """
+        now = self._clock()
+        req.finish(status, error, now=now)
         if status is RequestStatus.OK:
             self.stats.completed += 1
         elif status is RequestStatus.FAILED:
@@ -267,6 +292,8 @@ class ServingEngine:
             self.stats.timed_out += 1
         else:
             self.stats.rejected += 1
+        if self.obs is not None:
+            self.obs.on_finish(req, status, req.error, now)
         return status
 
     def submit(self, req: Request) -> RequestStatus:
@@ -319,6 +346,8 @@ class ServingEngine:
         req.submitted_at = self._clock()
         self.queue.append(req)
         self.stats.submitted += 1
+        if self.obs is not None:
+            self.obs.on_submit(req, req.submitted_at, len(self.queue))
         return RequestStatus.QUEUED
 
     def _sample(self, req: Request, logits: np.ndarray, step: int) -> int:
@@ -385,9 +414,15 @@ class ServingEngine:
                 toks = np.concatenate(
                     [req.prompt,
                      np.full(pad, req.prompt[-1])]).astype(np.int32)
+                if self.obs is not None:
+                    self.obs.on_admit(req, slot, now)
                 logits, self.cache = self._prefill_one(
                     self.params, self.cache, jnp.asarray(toks), slot, L)
                 self.stats.prefills += 1
+                if self.obs is not None:
+                    # ring prefill computes the full bucket-padded prompt
+                    self.obs.on_prefill(req, len(toks), len(toks), now)
+                    self.obs.on_prefill_done(req, now)
                 logits = self._apply_fault_hook("prefill",
                                                 np.asarray(logits))
                 if self.health_checks and not np.isfinite(logits).all():
@@ -400,6 +435,10 @@ class ServingEngine:
                 req.generated.append(nxt)
                 if req.first_token_at is None:
                     req.first_token_at = self._clock()
+                    if self.obs is not None:
+                        self.obs.on_first_token(req, req.first_token_at)
+                if self.obs is not None:
+                    self.obs.on_token(req, nxt, now)
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = L
                 self.slot_last[slot] = nxt
@@ -422,6 +461,8 @@ class ServingEngine:
                              "deadline expired mid-decode")
                 self._clear_slot(slot)
         self._admit(now)
+        if self.obs is not None:
+            self.obs.queue_depth.set(len(self.queue))
         active = self._active()
         if not active:
             return
@@ -430,6 +471,10 @@ class ServingEngine:
         logits, self.cache = self._decode_all(self.params, self.cache, last)
         logits = self._apply_fault_hook("decode", np.asarray(logits))
         self.stats.decode_steps += 1
+        if self.obs is not None:
+            self.obs.on_decode_rows(
+                [(self.slot_req[s], int(self.slot_pos[s]) + 1)
+                 for s in active], now)
         for slot in active:
             req = self.slot_req[slot]
             if self.health_checks and not np.isfinite(logits[slot]).all():
@@ -440,6 +485,8 @@ class ServingEngine:
             tok = self._sample(req, logits[slot], len(req.generated))
             req.generated.append(tok)
             self.stats.tokens_out += 1
+            if self.obs is not None:
+                self.obs.on_token(req, tok, now)
             self.slot_last[slot] = tok
             self.slot_pos[slot] += 1
             if ((req.eos_id is not None and tok == req.eos_id)
@@ -719,6 +766,20 @@ class PagedServingEngine(ServingEngine):
                 f"Raise max_len (table width) or block_size.")
         return self._enqueue(req)
 
+    def _obs_kv_slots(self) -> int:
+        return self.paged.capacity_tokens
+
+    def _used_tokens(self) -> int:
+        """KV positions actually written across all slots (filling slots
+        count their chunk offset, decoding slots their position)."""
+        used = 0
+        for slot in self._active():
+            if slot in self.slot_fill:
+                used += int(self.slot_fill[slot][1])
+            else:
+                used += int(self.slot_pos[slot])
+        return used
+
     def _clear_slot(self, slot: int) -> None:
         freed = self.paged.release(slot)
         if freed:
@@ -759,6 +820,9 @@ class PagedServingEngine(ServingEngine):
                 self.slot_fill[slot] = [toks, 0]
                 self._slot_seq[slot] = self._admit_order
                 self._admit_order += 1
+                if self.obs is not None:
+                    self.obs.on_admit(req, slot, now,
+                                      resumed=bool(req.generated))
                 break
 
     # -- block pressure ------------------------------------------------
@@ -774,10 +838,14 @@ class PagedServingEngine(ServingEngine):
         the *front* (it is the oldest waiting work) and resumes later by
         recomputing prompt + generated-so-far."""
         req = self.slot_req[slot]
+        freed = int(self.paged.n_blocks_of[slot])
         self._clear_slot(slot)
         req.status = RequestStatus.QUEUED
         self.queue.appendleft(req)
         self.stats.preemptions += 1
+        self.stats.evicted_blocks += freed
+        if self.obs is not None:
+            self.obs.on_preempt(req, slot, freed, self._clock())
 
     def _ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot`` to cover ``n_tokens`` positions, preempting
@@ -789,6 +857,10 @@ class PagedServingEngine(ServingEngine):
                 self.paged.ensure(slot, n_tokens)
                 return True
             except PoolExhausted:
+                self.stats.pool_exhaustions += 1
+                if self.obs is not None:
+                    self.obs.on_pool_exhausted(self.slot_req[slot], slot,
+                                               self._clock())
                 victim = self._pick_victim(slot)
                 if victim is None:
                     self._finish(self.slot_req[slot], RequestStatus.FAILED,
@@ -836,12 +908,19 @@ class PagedServingEngine(ServingEngine):
                 self.params, self.cache, jnp.asarray(chunk), slot,
                 valid, off, self._tables())
             self.stats.prefill_chunks += 1
+            if self.obs is not None:
+                # the dispatch computes C padded query positions at
+                # ``off``, attending the off + C cached positions
+                self.obs.on_prefill(req, len(chunk), off + len(chunk),
+                                    now, chunk=True, offset=off)
             off += valid
             if off < len(toks):
                 self.slot_fill[slot][1] = off
                 continue
             # final chunk: the request joins the decode batch
             self.stats.prefills += 1
+            if self.obs is not None:
+                self.obs.on_prefill_done(req, now)
             logits = self._apply_fault_hook("prefill", np.asarray(logits))
             if self.health_checks and not np.isfinite(logits).all():
                 self.stats.prefill_failures += 1
@@ -851,8 +930,12 @@ class PagedServingEngine(ServingEngine):
                 continue
             tok = self._sample(req, logits, len(req.generated))
             req.generated.append(tok)
+            if self.obs is not None:
+                self.obs.on_token(req, tok, now)
             if req.first_token_at is None:
                 req.first_token_at = self._clock()
+                if self.obs is not None:
+                    self.obs.on_first_token(req, req.first_token_at)
             del self.slot_fill[slot]
             self.slot_pos[slot] = len(toks)
             self.slot_last[slot] = tok
@@ -876,6 +959,10 @@ class PagedServingEngine(ServingEngine):
                 jnp.asarray(mask), self._tables())
             logits = self._apply_fault_hook("decode", np.asarray(logits))
             self.stats.decode_steps += 1
+            if self.obs is not None:
+                self.obs.on_decode_rows(
+                    [(self.slot_req[s], int(self.slot_pos[s]) + 1)
+                     for s in ok], now)
             for slot in ok:
                 req = self.slot_req[slot]
                 if self.health_checks \
@@ -887,7 +974,14 @@ class PagedServingEngine(ServingEngine):
                 tok = self._sample(req, logits[slot], len(req.generated))
                 req.generated.append(tok)
                 self.stats.tokens_out += 1
+                if self.obs is not None:
+                    self.obs.on_token(req, tok, now)
                 self.slot_last[slot] = tok
                 self.slot_pos[slot] += 1
                 self._maybe_finish(slot, req, tok)
         self.stats.cache_utilization.append(self.paged.utilization())
+        if self.obs is not None:
+            self.obs.on_kv_state(
+                self.paged.utilization(),
+                self.paged.fragmentation(self._used_tokens()))
+            self.obs.queue_depth.set(len(self.queue))

@@ -61,8 +61,11 @@ class LifecycleMixin:
     defaulted field awkward); this mixin only adds behavior on top.
     """
 
-    def finish(self, status: RequestStatus, error: str | None = None) -> None:
-        """Move to a terminal status — exactly once."""
+    def finish(self, status: RequestStatus, error: str | None = None,
+               now: float | None = None) -> None:
+        """Move to a terminal status — exactly once.  ``now`` (engine
+        clock) stamps ``finished_at``, the span-close time the obs layer
+        and the serving benchmarks read latencies from."""
         if status not in TERMINAL_STATUSES:
             raise ValueError(f"finish() requires a terminal status, "
                              f"got {status}")
@@ -73,6 +76,8 @@ class LifecycleMixin:
         self.status = status
         if error is not None:
             self.error = error
+        if now is not None:
+            self.finished_at = now
 
     def expired(self, now: float) -> bool:
         """True when a per-request deadline has passed (``deadline_s`` is

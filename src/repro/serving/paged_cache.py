@@ -194,3 +194,14 @@ class PagedKVCache:
     def utilization(self) -> float:
         """Fraction of the allocatable pool currently in use."""
         return self.allocator.n_used / (self.allocator.num_blocks - 1)
+
+    def fragmentation(self, used_tokens: int) -> float:
+        """Internal fragmentation of the allocated blocks: the fraction
+        of allocated positions holding no KV entry (last-block padding
+        plus positions pre-allocated a step ahead of their write).
+        ``used_tokens`` is the engine's count of written positions —
+        the allocator tracks blocks, not entries."""
+        allocated = int(self.n_blocks_of.sum()) * self.block_size
+        if allocated == 0:
+            return 0.0
+        return 1.0 - min(used_tokens, allocated) / allocated

@@ -9,6 +9,14 @@ dependency-free AST pass implementing the same ruleset declared in
 - F811  redefinition of an imported/defined name in the same scope
 - E722  bare ``except:``
 
+One repo-specific rule runs on **every** invocation, with or without
+ruff (ruff is not configured for it here):
+
+- T201  ``print(...)`` call inside ``src/repro/`` — library code must
+  not write to stdout (stray prints corrupt machine-read benchmark CSV
+  and report output); the launch CLIs route terminal output through
+  ``repro.launch.console.emit``.
+
 A ``# noqa`` (optionally ``# noqa: CODE``) comment on the offending
 line suppresses a finding, matching ruff's semantics closely enough
 that the two paths agree on this tree.
@@ -25,6 +33,10 @@ import subprocess
 import sys
 
 DEFAULT_PATHS = ("src", "tools", "benchmarks", "tests")
+
+# Library tree where the T201 no-print rule applies (the launch CLIs
+# inside it use repro.launch.console.emit instead).
+LIBRARY_TREE = pathlib.Path("src") / "repro"
 
 
 def _noqa_lines(source: str) -> dict:
@@ -84,6 +96,33 @@ def _import_bindings(node):
             if a.name == "*":
                 continue
             yield (a.asname or a.name), node.lineno
+
+
+def _in_library(path: pathlib.Path) -> bool:
+    return "src/repro" in path.resolve().as_posix()
+
+
+def _check_prints(path: pathlib.Path) -> list:
+    """T201: ``print(...)`` calls in library code (AST-based, so
+    docstrings and comments mentioning print are fine)."""
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [(path, e.lineno or 0, "E999", f"syntax error: {e.msg}")]
+    noqa = _noqa_lines(source)
+    findings = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            codes = noqa.get(node.lineno)
+            if codes is not None and (not codes or "T201" in codes):
+                continue
+            findings.append((path, node.lineno, "T201",
+                             "`print` call in library code — use "
+                             "repro.launch.console.emit (CLIs) or return "
+                             "data to the caller"))
+    return findings
 
 
 def _check_module(path: pathlib.Path) -> list:
@@ -152,16 +191,32 @@ def _check_module(path: pathlib.Path) -> list:
 
 def main(argv=None) -> int:
     paths = (argv or sys.argv[1:]) or list(DEFAULT_PATHS)
-    ruff = shutil.which("ruff")
-    if ruff:
-        return subprocess.call([ruff, "check", *paths])
     files = []
     for p in paths:
         pp = pathlib.Path(p)
         files += sorted(pp.rglob("*.py")) if pp.is_dir() else [pp]
+    library_files = [f for f in files if _in_library(f)]
+
+    # T201 runs on every invocation; ruff (when present) is not
+    # configured for it, so the scan cannot be delegated.
     findings = []
+    for f in library_files:
+        findings += _check_prints(f)
+
+    ruff = shutil.which("ruff")
+    if ruff:
+        rc = subprocess.call([ruff, "check", *paths])
+        for path, lineno, code, msg in findings:
+            print(f"{path}:{lineno}: {code} {msg}")
+        if findings:
+            print(f"lint: {len(findings)} T201 finding"
+                  f"{'s' if len(findings) != 1 else ''} in "
+                  f"{len(library_files)} library files")
+        return rc or (1 if findings else 0)
+
     for f in files:
         findings += _check_module(f)
+    findings.sort(key=lambda x: (str(x[0]), x[1]))
     for path, lineno, code, msg in findings:
         print(f"{path}:{lineno}: {code} {msg}")
     n = len(findings)
